@@ -1,0 +1,58 @@
+"""Shared benchmark helpers: timing, CSV emit, model variants.
+
+All benchmarks run on this container's CPU; wall-clock ratios between the
+unoptimized and optimized pipelines are real measurements, while
+FPGA/TPU-projected numbers are analytic (bandwidth/roofline models) and
+labelled as such in the output.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+
+def timeit(fn, *args, reps=3, warmup=1):
+    """Median wall seconds of fn(*args) after jit warmup."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2]
+
+
+def emit(rows):
+    """Print ``name,us_per_call,derived`` CSV rows."""
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def vit_encoder_config(name, layers, hidden, mlp, heads,
+                       optimized: bool) -> ArchConfig:
+    """A ViT-style encoder config (non-causal trunk, GELU MLP, layernorm).
+
+    ``optimized=False``: the paper's baseline — naive O(N²)-materialized
+    attention, exact erf GELU.  ``optimized=True``: techniques ①②③④ —
+    blocked streaming attention with online softmax, LUT GELU, unified
+    linear path.
+    """
+    return ArchConfig(
+        name=name, family="vit-moe", num_layers=layers, d_model=hidden,
+        num_heads=heads, num_kv_heads=heads, d_ff=mlp, vocab_size=0,
+        block_pattern=("attn_mlp",), mlp_kind="gelu", norm="layernorm",
+        rope="none", embed_input="embeddings",
+        attn_impl="blocked" if optimized else "naive",
+        attn_block_k=128,
+        use_lut_activation=optimized,
+        remat=False,
+    )

@@ -1,0 +1,49 @@
+"""Benchmark harness entry point — one module per paper table/figure.
+
+  table2_bandwidth   — Table II  (attention reorder bandwidth model)
+  table3_vit_latency — Table III (ViT-family latency w/o vs w/ techniques)
+  table4_efficiency  — Table IV  (energy efficiency, measured + projected)
+  table5_ablation    — Table V   (cumulative technique ablation on M³ViT)
+  fig12_breakdown    — Fig. 12   (per-component latency/cost breakdown)
+
+Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+Emits ``name,us_per_call,derived`` CSV.
+"""
+
+import argparse
+import sys
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
+           "table5_ablation", "fig12_breakdown"]
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced model set / reps")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    rows = []
+    failed = []
+    for name in MODULES:
+        if args.only and args.only not in name:
+            continue
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        try:
+            rows.extend(mod.run(quick=args.quick))
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    emit(rows)
+    if failed:
+        print(f"FAILED: {failed}", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Paper Table II — attention reordering bandwidth model.
+
+Data loads, latency, and bandwidth with/without reordering at parallelism
+p, from the closed forms (exact reproduction of the table), evaluated at
+the paper's Cityscapes geometry (N = 128 patches) and at LM scale.
+"""
+
+from repro.core.attention import bandwidth_model
+
+
+def run(quick=False):
+    rows = []
+    for n in (128, 4096):
+        for p in (2, 4, 8, 16):
+            m = bandwidth_model(n, p)
+            rows.append((
+                f"table2/N{n}_p{p}",
+                0.0,
+                f"loads_wo={m.loads_without_reorder};"
+                f"loads_w={m.loads_with_reorder};"
+                f"bw_wo={m.bandwidth_without_reorder:.2f};"
+                f"bw_w={m.bandwidth_with_reorder:.3f};"
+                f"latency_overhead={m.latency_with_reorder / m.latency_without_reorder - 1:.2e}",
+            ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

@@ -1,0 +1,85 @@
+"""Paper Table III — latency reduction across ViT models.
+
+The paper reports FPGA latency without vs with its techniques (9.76–10.20×).
+On this CPU container we measure the same *algorithmic* contrast — naive
+O(N²)-materialized attention + exact erf GELU vs blocked streaming attention
+(technique ①+②) + LUT GELU (③) through the unified linear path (④) — as
+wall-clock, and separately evaluate the paper's own bandwidth model at the
+FPGA's parallelism (p=4), which is where the ~10× on FPGA comes from.
+XLA fusion already hides much of the HBM traffic a CPU/FPGA pays, so the
+measured CPU ratio is expected to be smaller than the FPGA table; both
+numbers are reported.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import timeit, vit_encoder_config
+from repro.core.attention import bandwidth_model
+from repro.launch.mesh import HW
+from repro.models import model as M
+from repro.roofline.hlo_cost import analyze_hlo_text
+
+# (name, layers, hidden, mlp, heads, tokens) — paper Table III dims;
+# tokens = 197 for the 224×224/16 ImageNet geometry, 128 for M3ViT
+MODELS = [
+    ("vit_base", 12, 768, 3072, 12, 197),
+    ("vit_large", 24, 1024, 4096, 16, 197),
+    ("vit_huge", 32, 1280, 5120, 16, 197),
+    ("deit_small", 12, 384, 1536, 6, 197),
+    ("deit_base", 12, 768, 3072, 12, 197),
+]
+QUICK_MODELS = [MODELS[0], MODELS[3]]
+
+PAPER_SPEEDUP = {"vit_base": 9.80, "vit_large": 9.83, "vit_huge": 9.84,
+                 "deit_small": 9.76, "deit_base": 9.80, "m3vit": 10.20}
+
+
+def run(quick=False):
+    rows = []
+    models = QUICK_MODELS if quick else MODELS
+    for name, layers, hidden, mlp, heads, tokens in models:
+        x = jax.random.normal(jax.random.PRNGKey(0), (1, tokens, hidden),
+                              dtype=jnp.bfloat16)
+        times = {}
+        tpu_ms = {}
+        for opt in (False, True):
+            cfg = vit_encoder_config(name, layers, hidden, mlp, heads, opt)
+            params = M.init_params(jax.random.PRNGKey(0), cfg)
+            fwd = jax.jit(lambda p, x, c=cfg: M.forward(p, x, c)[0])
+            times[opt] = timeit(fwd, params, x, reps=3 if quick else 5)
+            # TPU-projected latency from the compiled roofline: the naive
+            # variant pays the materialized-score HBM traffic; the blocked
+            # variant's attention runs at the flash kernel's Q+K+V+O traffic
+            hc = analyze_hlo_text(fwd.lower(params, x).compile().as_text())
+            bytes_ = hc.bytes_accessed
+            if opt:
+                attn = sum(hc.by_scope.get(s, {}).get("bytes", 0.0)
+                           for s in ("attn_scores", "attn_pv"))
+                kern = (2.0 * layers * 2          # Q+O, K+V; bf16
+                        * (2 * tokens * hidden))
+                bytes_ = bytes_ - attn + kern
+            tpu_ms[opt] = max(bytes_ / HW.HBM_BW,
+                              hc.flops / HW.PEAK_FLOPS_BF16) * 1e3
+        measured = times[False] / times[True]
+        # the paper's FPGA gain is bandwidth-bound: Table II at p=4 applied
+        # to the attention share (~50% of latency, Fig. 12) + unified-linear
+        m = bandwidth_model(tokens, 4)
+        analytic_attn = m.loads_without_reorder / m.loads_with_reorder
+        rows.append((
+            f"table3/{name}",
+            times[True] * 1e6,
+            f"cpu_ms_wo={times[False]*1e3:.1f};cpu_ms_w={times[True]*1e3:.1f};"
+            f"cpu_speedup={measured:.2f}x;"
+            f"tpu_ms_wo={tpu_ms[False]:.2f};tpu_ms_w={tpu_ms[True]:.2f};"
+            f"tpu_projected_speedup={tpu_ms[False]/tpu_ms[True]:.2f}x;"
+            f"analytic_attn_load_reduction={analytic_attn:.2f}x;"
+            f"paper_fpga_speedup={PAPER_SPEEDUP[name]}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

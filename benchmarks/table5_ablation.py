@@ -1,0 +1,82 @@
+"""Paper Table V — cumulative ablation of the proposed techniques on M³ViT.
+
+Applies the techniques one at a time in the paper's order and measures
+(a) wall-clock forward latency of the full multi-task model and (b) output
+deviation vs the exact baseline (the paper's accuracy column: every
+technique except the GELU approximation is mathematically exact; the LUT
+GELU deviates by <2.5e-3 pointwise and the paper measures *improved*
+accuracy vs the sigmoid approximation it replaced).
+
+Rows (cumulative, as in the paper):
+  0 baseline      — naive attention, exact GELU, patch-by-patch MoE (onehot
+                    dense dispatch stands in for the reload-per-token path)
+  1 +expert-by-expert reordering (grouped dispatch)      (§IV-D)
+  2 +single-pass softmax (blocked attention carry)       (§IV-B)
+  3 +LUT GELU                                            (§IV-C)
+  4 +unified linear (shared GEMM path = the jnp uniform path here)
+  5 +attention reordering Q×K, M'×V (blocked streaming)  (§IV-A)
+"""
+
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import configs
+from repro.models import vit
+
+PAPER = [
+    ("baseline", 1.00), ("expert_reorder", 1.50), ("singlepass_softmax", 1.84),
+    ("lut_gelu", 3.05), ("unified_linear", 6.23), ("attn_reorder_qk", 10.98),
+    ("attn_reorder_mv", 18.77),
+]
+
+
+def variants(cfg):
+    base = replace(cfg, attn_impl="naive", use_lut_activation=False,
+                   moe=replace(cfg.moe, impl="onehot"), remat=False)
+    v1 = replace(base, moe=replace(base.moe, impl="grouped"))
+    v2 = v1                                   # single-pass softmax: the carry
+    # algebra is inside blocked attention; standalone it equals jax softmax,
+    # so the latency step lands in v5 — accuracy tracked from here
+    v3 = replace(v1, use_lut_activation=True)
+    v4 = v3                                   # unified linear is the only
+    # linear path in this codebase (technique ④ is structural)
+    v5 = replace(v3, attn_impl="blocked", attn_block_k=64)
+    return [("baseline", base), ("expert_reorder", v1),
+            ("singlepass_softmax", v2), ("lut_gelu", v3),
+            ("unified_linear", v4), ("attn_reorder", v5)]
+
+
+def run(quick=False):
+    cfg = configs.get("m3vit")
+    if quick:
+        cfg = replace(cfg, num_layers=4)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 256, 3))
+
+    rows = []
+    ref_out = None
+    t0 = None
+    for name, vcfg in variants(cfg):
+        fwd = jax.jit(lambda p, x, c=vcfg: vit.forward(p, x, c, "semseg")[0])
+        t = timeit(fwd, params, img, reps=3)
+        out = np.asarray(fwd(params, img), np.float32)
+        if ref_out is None:
+            ref_out, t0 = out, t
+        dev = float(np.max(np.abs(out - ref_out)))
+        rows.append((
+            f"table5/{name}",
+            t * 1e6,
+            f"cpu_ms={t*1e3:.1f};speedup={t0/t:.2f}x;max_dev={dev:.2e};"
+            f"paper_speedup={dict(PAPER).get(name, dict(PAPER).get('attn_reorder_mv'))}x",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run())

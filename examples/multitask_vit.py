@@ -1,0 +1,87 @@
+"""The paper's headline scenario: real-time multi-task ViT with
+zero-overhead task switching (Edge-MoE Fig. 1 / §IV-F).
+
+Trains M³ViT briefly on synthetic Cityscapes-shaped scenes (semantic
+segmentation + depth estimation — the paper's two tasks), then alternates
+tasks per frame the way the on-board demo does, timing the switch to show
+it costs no recompilation and no weight movement.
+
+    PYTHONPATH=src python examples/multitask_vit.py --steps 30
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.data import DataConfig, SyntheticM3ViTStream
+from repro.models import vit
+from repro.optim import OptConfig, adamw_init, adamw_update
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (fast)")
+    ap.add_argument("--frames", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = configs.get("m3vit", smoke=args.smoke)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    stream = SyntheticM3ViTStream(DataConfig(batch=2, seq_len=0, kind="m3vit"))
+    ocfg = OptConfig(lr=3e-3, warmup_steps=5, total_steps=args.steps,
+                     weight_decay=0.0)
+    opt = adamw_init(params, ocfg)
+
+    @jax.jit
+    def train_step(params, opt, image, semseg, depth):
+        def loss_fn(p):
+            ls, _ = vit.multitask_loss(p, image, semseg, cfg, "semseg")
+            ld, _ = vit.multitask_loss(p, image, depth, cfg, "depth")
+            return ls + ld, (ls, ld)
+
+        (loss, (ls, ld)), g = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        params, opt, _ = adamw_update(params, g, opt, ocfg)
+        return params, opt, ls, ld
+
+    print(f"[multitask] training M³ViT ({'smoke' if args.smoke else 'paper'} "
+          f"config) on synthetic Cityscapes scenes…")
+    for i in range(args.steps):
+        b = stream.batch(i % 4)
+        params, opt, ls, ld = train_step(
+            params, opt, jnp.asarray(b["image"]), jnp.asarray(b["semseg"]),
+            jnp.asarray(b["depth"]))
+        if i % 10 == 0 or i == args.steps - 1:
+            print(f"  step {i:3d}: semseg_ce={float(ls):.3f} "
+                  f"depth_rmse={float(ld):.4f}")
+
+    # ---- serving with per-frame task switch (the paper's demo loop)
+    fns = {t: jax.jit(lambda p, x, t=t: vit.forward(p, x, cfg, t)[0])
+           for t in ("semseg", "depth")}
+    frame = jnp.asarray(stream.batch(99)["image"][:1])
+    for t, f in fns.items():
+        jax.block_until_ready(f(params, frame))   # warm both tasks once
+
+    times = {"semseg": [], "depth": []}
+    for i in range(args.frames):
+        task = "semseg" if i % 2 == 0 else "depth"   # switch EVERY frame
+        t0 = time.perf_counter()
+        out = fns[task](params, frame)
+        jax.block_until_ready(out)
+        times[task].append(time.perf_counter() - t0)
+    b = stream.batch(99)
+    pred = np.asarray(jnp.argmax(fns["semseg"](params, frame), -1))
+    acc = (pred[0] == b["semseg"][0]).mean()
+    print(f"[multitask] alternating tasks per frame ({args.frames} frames):")
+    for t, ts in times.items():
+        print(f"  {t:7s}: {np.mean(ts)*1e3:6.1f} ms/frame "
+              f"(±{np.std(ts)*1e3:.1f}) — no recompile on switch")
+    print(f"  semseg pixel acc on synthetic scene: {acc:.1%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,78 @@
+"""Quickstart: the paper's five techniques as composable JAX modules.
+
+Runs in ~30s on CPU.  Demonstrates each Edge-MoE technique in isolation,
+then the full M³ViT multi-task model using all of them.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import attention, gelu, moe, online_softmax, routing
+from repro.models import vit
+
+
+def main():
+    rng = np.random.default_rng(0)
+
+    # ① attention reordering — blocked streaming == naive, at constant bw
+    q = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(1, 4, 128, 64)), jnp.float32)
+    o_naive = attention.naive_attention(q, k, v, causal=False)
+    o_blocked = attention.blocked_attention(q, k, v, causal=False, block_k=32)
+    m = attention.bandwidth_model(n=128, p=4)
+    print(f"① attention reordering: max|Δ|={float(jnp.abs(o_naive-o_blocked).max()):.2e}, "
+          f"loads {m.loads_without_reorder} → {m.loads_with_reorder} "
+          f"(bandwidth {m.bandwidth_without_reorder:.1f} → "
+          f"{m.bandwidth_with_reorder:.2f} blocks/cycle)")
+
+    # ② single-pass softmax — overflow-proof, one pass (Algorithm 1)
+    x = jnp.asarray([88.0, 90.0, 7.0, -3.0], jnp.float32)  # exp(90) overflows
+    b, s = online_softmax.online_max_sum(x)
+    print(f"② single-pass softmax: bias={float(b):.0f} denom={float(s):.4f} "
+          f"(finite despite exp(90)); matches jax.nn.softmax: "
+          f"{bool(jnp.allclose(online_softmax.softmax(x), jax.nn.softmax(x)))}")
+
+    # ③ LUT GELU — ReLU − δ(|x|), half-table, truncated, bit-shift index
+    xs = jnp.asarray(np.linspace(-8, 8, 100001), jnp.float32)
+    err = float(jnp.abs(gelu.lut_gelu(xs) - gelu.exact_gelu(xs)).max())
+    table = gelu.build_delta_table("gelu")
+    print(f"③ LUT GELU: table={table.shape[0]} entries "
+          f"({table.shape[0]*4/1024:.0f} KiB), max|err|={err:.1e}")
+
+    # ④ unified linear — one GEMM path (+ fused LUT epilogue) for everything
+    from repro.core.unified_linear import unified_linear
+    xw = jnp.asarray(rng.normal(size=(128, 192)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(192, 768)), jnp.float32)
+    y = unified_linear(xw, w, activation="gelu", use_lut=True)
+    print(f"④ unified linear: fused GEMM+bias+LUT-GELU -> {y.shape}")
+
+    # ⑤ expert-by-expert reordering — queues, metaqueue, weighted combine
+    logits = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+    r = routing.route(logits, k=4, capacity=64)
+    sizes = np.bincount(np.asarray(r.expert).ravel(), minlength=16)
+    print(f"⑤ expert-by-expert: queues per expert {sizes.tolist()} "
+          f"(metaqueue skips {int((sizes == 0).sum())} empty)")
+
+    # all together: the paper's M³ViT, multi-task, zero-overhead task switch
+    cfg = configs.get("m3vit")
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 256, 3))
+    for task in ("semseg", "depth"):
+        t0 = time.perf_counter()
+        pred = jax.jit(
+            lambda p, x, t=task: vit.forward(p, x, cfg, t)[0])(params, img)
+        jax.block_until_ready(pred)
+        print(f"   M³ViT[{task}]: {pred.shape} in "
+              f"{time.perf_counter()-t0:.2f}s (inc. compile)")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Edge-MoE on TPU — production JAX framework.
+
+The paper's five techniques as composable modules (``repro.core``), a
+10-architecture model zoo (``repro.configs``/``repro.models``), Pallas TPU
+kernels (``repro.kernels``), and the distributed substrate (data, optim,
+checkpoint, train, serve, dist, launch, roofline).
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,23 @@
+from repro.configs.base import (
+    ARCH_NAMES,
+    SHAPES,
+    ArchConfig,
+    MoESpec,
+    Shape,
+    cells,
+    get,
+    list_archs,
+    reduced,
+)
+
+__all__ = [
+    "ARCH_NAMES",
+    "SHAPES",
+    "ArchConfig",
+    "MoESpec",
+    "Shape",
+    "cells",
+    "get",
+    "list_archs",
+    "reduced",
+]

@@ -1,0 +1,26 @@
+"""Llama-3.2-1B — small llama3 dense decoder.
+
+[hf:meta-llama/Llama-3.2-1B; unverified]  16L d_model=2048 32H (GQA kv=8)
+d_ff=8192 vocab=128256.  RoPE (theta 500k), SwiGLU, RMSNorm, tied embeddings.
+"""
+
+from repro.configs.base import ArchConfig, reduced
+
+CONFIG = ArchConfig(
+    name="llama3_2_1b",
+    family="dense",
+    num_layers=16,
+    d_model=2048,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=128256,
+    mlp_kind="swiglu",
+    norm="rmsnorm",
+    rope="rope",
+    rope_theta=500000.0,
+    tie_embeddings=True,
+    sub_quadratic=False,
+)
+
+SMOKE_CONFIG = reduced(CONFIG)

@@ -1,0 +1,38 @@
+"""M³ViT — the paper's own model (NOT an assigned-pool arch; paper-faithful).
+
+[NeurIPS 2022, Liang et al.; Edge-MoE Table III row 6]  12 blocks, hidden 192,
+MLP 768, 3 heads, ~7M params.  Even blocks = standard ViT block (dense MLP),
+odd blocks = MoE block (16 experts, top-4, per-task gating; 2 tasks: semantic
+segmentation + depth estimation on Cityscapes 128×256, patch 16×16 → 128
+tokens).  Encoder-only (non-causal), GELU activations, LayerNorm.
+"""
+
+from repro.configs.base import ArchConfig, MoESpec, reduced
+
+CONFIG = ArchConfig(
+    name="m3vit",
+    family="vit-moe",
+    num_layers=12,
+    d_model=192,
+    num_heads=3,
+    num_kv_heads=3,
+    d_ff=768,
+    vocab_size=0,                      # dense prediction heads, no LM head
+    block_pattern=("attn_mlp", "attn_moe"),
+    mlp_kind="gelu",
+    norm="layernorm",
+    rope="none",
+    embed_input="embeddings",          # patch embedding handled in models/vit.py
+    moe=MoESpec(num_experts=16, top_k=4, d_ff=768, num_tasks=2,
+                capacity_factor=2.0, impl="grouped", group_size=128),
+    num_tasks=2,
+    sub_quadratic=False,
+)
+
+SMOKE_CONFIG = reduced(CONFIG, vocab_size=0)  # trunk has task heads, no LM head
+
+# Cityscapes-as-in-paper geometry
+IMAGE_H, IMAGE_W, PATCH = 128, 256, 16
+NUM_PATCHES = (IMAGE_H // PATCH) * (IMAGE_W // PATCH)  # 128 tokens
+NUM_SEG_CLASSES = 19
+TASKS = ("semseg", "depth")

@@ -1,0 +1,29 @@
+"""RecurrentGemma-9B — RG-LRU recurrent blocks + local attention, 2:1.
+
+[arXiv:2402.19427 (Griffin); unverified]  38L d_model=4096 16H (MQA kv=1)
+d_ff=12288 vocab=256000.  Griffin pattern: (recurrent, recurrent, local-attn)
+cycled; local attention window 2048; GeGLU MLP; RMSNorm.  sub_quadratic=True:
+bounded KV (window) + O(1) recurrent state → the long_500k cell runs.
+"""
+
+from repro.configs.base import ArchConfig, reduced
+
+CONFIG = ArchConfig(
+    name="recurrentgemma_9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    d_ff=12288,
+    vocab_size=256000,
+    block_pattern=("rglru_mlp", "rglru_mlp", "attn_local_mlp"),
+    mlp_kind="geglu",
+    norm="rmsnorm",
+    rope="rope",
+    window=2048,
+    lru_width=4096,
+    sub_quadratic=True,
+)
+
+SMOKE_CONFIG = reduced(CONFIG, num_layers=6)

@@ -1,0 +1,32 @@
+"""xLSTM-350M — sLSTM + mLSTM recurrent blocks (attention-free).
+
+[arXiv:2405.04517; unverified]  24L d_model=1024 4H d_ff=0 vocab=50304.
+Block pattern xLSTM[7:1]: seven mLSTM blocks then one sLSTM block per period.
+d_ff=0: the blocks carry their own up/down projections (pf=2 for mLSTM,
+pf=4/3 for sLSTM) instead of a separate MLP.
+
+Paper-technique applicability: no softmax attention → the attention-reordering
+technique has no site (noted in DESIGN.md §Arch-applicability).  The mLSTM
+exponential-gate stabilizer m_t = max(log f_t + m_{t-1}, log i_t) is the same
+running-max rescaling as the single-pass softmax.  sub_quadratic=True: the
+long_500k cell runs with O(1)/token recurrent state.
+"""
+
+from repro.configs.base import ArchConfig, reduced
+
+CONFIG = ArchConfig(
+    name="xlstm_350m",
+    family="ssm",
+    num_layers=24,
+    d_model=1024,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    norm="layernorm",
+    rope="none",
+    sub_quadratic=True,
+)
+
+SMOKE_CONFIG = reduced(CONFIG, num_layers=8, d_ff=0)

@@ -1,0 +1,12 @@
+"""Edge-MoE core: the paper's five techniques as composable JAX modules.
+
+①  attention.blocked_attention   — attention reordering (streamed K/V reuse)
+②  online_softmax                — single-pass dynamic-bias softmax (Alg. 1)
+③  gelu.lut_activation           — ReLU − δ(x) LUT activation approximation
+④  unified_linear.unified_linear — one GEMM module for every linear layer
+⑤  routing / moe                 — expert-by-expert reordering + multi-task gating
+"""
+
+from repro.core import attention, gelu, moe, online_softmax, routing, unified_linear
+
+__all__ = ["attention", "gelu", "moe", "online_softmax", "routing", "unified_linear"]

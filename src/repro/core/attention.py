@@ -1,0 +1,254 @@
+"""Blocked self-attention with streaming K/V reuse (Edge-MoE §IV-A + §IV-B).
+
+The paper's attention reordering caches a block of ``p`` Q rows on-chip and
+streams each K token exactly once past the resident block, so DRAM traffic
+drops from ``N^2 + N`` blocks to ``N^2/p + N + p - 1`` and the *bandwidth*
+needed for a given parallelism is constant (Table II).  The M'xV product is
+reordered the same way in reverse, with softmax fused into the consumer.
+
+On TPU that schedule **is** tiled flash attention: a VMEM-resident Q tile
+(``block_q`` = the paper's p), K/V streamed tile-by-tile from HBM, and the
+single-pass softmax statistics (m, l) rescaling a PV accumulator — the fusion
+of the paper's "Pass 3" into the M'xV consumer.  The skewed/"missing outputs"
+bookkeeping of the FPGA pipeline disappears because the MXU consumes whole
+tiles; the reuse schedule is identical with the tile as the unit.
+
+This module is the pure-jnp implementation used by every model (and as the
+oracle for the Pallas kernel in ``kernels/flash_attention.py``):
+
+  * ``naive_attention``    — materializes the N x N score matrix (the paper's
+                             "without reordering" baseline).
+  * ``blocked_attention``  — streams K/V in blocks with (m, l, acc) carries.
+  * ``decode_attention``   — one new query against a KV cache (serve path).
+  * ``bandwidth_model``    — Table II closed forms, used by tests/benchmarks.
+
+Supports GQA (kv heads broadcast over query-head groups), causal masking and
+sliding-window (local) attention — the latter for RecurrentGemma's 1-in-3
+local-attention layers and for the long-context cells.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "naive_attention",
+    "blocked_attention",
+    "decode_attention",
+    "attention",
+    "bandwidth_model",
+]
+
+NEG_INF = -1e30  # large-negative instead of -inf: keeps masked rows NaN-free
+
+
+def _mask_bias(sq, skv, q_offset, causal: bool, window: int | None, dtype):
+    """(sq, skv) additive mask bias. q position i maps to absolute i+q_offset."""
+    if not causal and window is None:
+        return None
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    return jnp.where(ok, 0.0, NEG_INF).astype(dtype)
+
+
+def _broadcast_kv(k, v, num_q_heads):
+    """GQA: repeat kv heads across query-head groups."""
+    hkv = k.shape[1]
+    if hkv == num_q_heads:
+        return k, v
+    group = num_q_heads // hkv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    return k, v
+
+
+def naive_attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):
+    """Reference attention; O(N^2) score matrix in memory.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D).  Returns (B, Hq, Sq, D).
+    Softmax statistics accumulate in f32 regardless of input dtype.
+    """
+    b, hq, sq, d = q.shape
+    k, v = _broadcast_kv(k, v, hq)
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    with jax.named_scope("attn_scores"):
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, k,
+                            preferred_element_type=jnp.float32)
+        scores = scores * scale
+        bias = _mask_bias(sq, k.shape[2], q_offset, causal, window, scores.dtype)
+        if bias is not None:
+            scores = scores + bias[None, None]
+        probs = jax.nn.softmax(scores, axis=-1)
+    with jax.named_scope("attn_pv"):
+        out = jnp.einsum("bhqk,bhkd->bhqd", probs.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+def blocked_attention(
+    q,
+    k,
+    v,
+    *,
+    causal=True,
+    window=None,
+    q_offset=0,
+    scale=None,
+    block_k: int = 512,
+):
+    """Streaming attention: K/V consumed block-by-block, Q resident (§IV-A).
+
+    Every K/V block is loaded once and reused across all resident Q rows; the
+    single-pass softmax carry (m, l) from §IV-B rescales the accumulator, and
+    the exp/div of "Pass 3" is fused into the PV accumulation.  Numerically
+    identical to ``naive_attention`` (tests assert allclose).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    g = hq // hkv
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+
+    nblk = -(-skv // block_k)
+    pad = nblk * block_k - skv
+    if pad:
+        padk = jnp.zeros(k.shape[:2] + (pad, d), k.dtype)
+        k = jnp.concatenate([k, padk], axis=2)
+        v = jnp.concatenate([v, padk.astype(v.dtype)], axis=2)
+    kb = k.reshape(b, hkv, nblk, block_k, d)
+    vb = v.reshape(b, hkv, nblk, block_k, d)
+
+    qpos = jnp.arange(sq) + q_offset
+    # GQA as a grouped einsum over native kv heads — no repeat/broadcast:
+    # a materialized head-broadcast costs group× the K/V bytes in HBM.
+    qf = (q * scale).reshape(b, hkv, g, sq, d)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, start = blk
+        with jax.named_scope("attn_scores"):
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kblk,
+                           preferred_element_type=jnp.float32)
+            kpos = start + jnp.arange(block_k)
+            ok = kpos[None, :] < skv  # mask the padded tail
+            if causal:
+                ok = ok & (kpos[None, :] <= qpos[:, None])
+            if window is not None:
+                ok = ok & (kpos[None, :] > qpos[:, None] - window)
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_blk = jnp.max(s, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            # rescale prev accumulator onto the new bias (Algorithm 1, blockwise)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+        with jax.named_scope("attn_pv"):
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, sq, d), jnp.float32)
+    starts = jnp.arange(nblk) * block_k
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.moveaxis(kb, 2, 0), jnp.moveaxis(vb, 2, 0), starts))
+    out = acc / jnp.maximum(l, 1e-37)[..., None]
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None, scale=None):
+    """One-token decode: q (B, Hq, 1, D) vs cache (B, Hkv, Smax, D).
+
+    ``cache_len`` (B,) int32 — number of valid entries per sequence.  The new
+    token's own K/V must already be written into the cache at cache_len-1.
+    Linear in cache length; the streaming reuse schedule degenerates to a
+    single pass over K/V, which is exactly the paper's M'xV ordering.
+    """
+    b, hq, one, d = q.shape
+    hkv = k_cache.shape[1]
+    g = hq // hkv
+    smax = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    ns = jax.named_scope("attn_decode")
+    ns.__enter__()
+    # GQA as grouped einsum over native kv heads (no repeat: a broadcast of
+    # a 32k-token cache costs group× the cache bytes in HBM traffic)
+    qg = (q * scale).reshape(b, hkv, g * one, d)
+    s = jnp.einsum("bhgd,bhkd->bhgk", qg, k_cache,
+                   preferred_element_type=jnp.float32)
+    kpos = jnp.arange(smax)[None, None, None, :]
+    ok = kpos < cache_len[:, None, None, None]
+    if window is not None:
+        ok = ok & (kpos > cache_len[:, None, None, None] - 1 - window)
+    s = jnp.where(ok, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, hq, one, d)
+    ns.__exit__(None, None, None)
+    return out.astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None,
+              impl: str = "blocked", block_k: int = 512, use_pallas: bool = False):
+    """Dispatch: 'naive' | 'blocked' (paper technique #1) | pallas kernel."""
+    if use_pallas:
+        from repro.kernels import ops as _kops
+
+        return _kops.flash_attention(q, k, v, causal=causal, window=window,
+                                     q_offset=q_offset, scale=scale)
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset, scale=scale)
+    return blocked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, scale=scale, block_k=block_k)
+
+
+@dataclass(frozen=True)
+class BandwidthModel:
+    """Closed forms of paper Table II for N tokens at parallelism p."""
+
+    n: int
+    p: int
+
+    @property
+    def loads_without_reorder(self) -> int:
+        return self.n * self.n + self.n
+
+    @property
+    def loads_with_reorder(self) -> int:
+        return self.n * self.n // self.p + self.n + self.p - 1
+
+    @property
+    def latency_without_reorder(self) -> float:
+        return self.n * self.n / self.p
+
+    @property
+    def latency_with_reorder(self) -> float:
+        return self.n * self.n / self.p + self.p - 1
+
+    @property
+    def bandwidth_without_reorder(self) -> float:
+        """blocks per cycle ~ p"""
+        return self.loads_without_reorder / self.latency_without_reorder
+
+    @property
+    def bandwidth_with_reorder(self) -> float:
+        """blocks per cycle ~ 1"""
+        return self.loads_with_reorder / self.latency_with_reorder
+
+
+def bandwidth_model(n: int, p: int) -> BandwidthModel:
+    return BandwidthModel(n=n, p=p)

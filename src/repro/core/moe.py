@@ -1,0 +1,300 @@
+"""Mixture-of-Experts layer with multi-task gating (Edge-MoE §IV-D + §IV-F).
+
+Composes the routing machinery (``core/routing.py``) with per-expert MLPs run
+through the unified linear module.  Two expert-compute paths, mathematically
+identical at equal capacity:
+
+  * ``impl="grouped"`` — gather tokens into per-expert buffers and run a
+    grouped GEMM (the paper's expert-by-expert sweep; Pallas kernel when
+    ``use_pallas``).  Best on a single device / small device counts.
+  * ``impl="onehot"``  — dense one-hot dispatch/combine einsums (GShard
+    style).  Lowers to clean dots + all-to-alls under GSPMD; used by the
+    512-chip dry-run.
+
+Multi-task gating (§IV-F): gate weights carry a leading task axis; switching
+the active task is a dynamic index into that table — the TPU analogue of the
+paper's "just update the pointer to the task-specific gating network", with
+zero weight movement and zero recompilation.
+
+Expert MLP kinds:
+  * ``"gelu"``   — Linear → GELU → Linear (M3ViT / the paper's experts)
+  * ``"swiglu"`` — (SiLU(x W_g) * x W_u) W_d (llama4-scout, kimi-k2)
+
+Optionally ``num_shared_experts`` dense always-on experts are added to the
+routed output (DeepSeek/Kimi-K2 style).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import routing as R
+from repro.core.unified_linear import unified_linear
+
+__all__ = ["MoEConfig", "init_moe", "apply_moe"]
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                      # per-expert hidden dim
+    num_experts: int
+    top_k: int
+    num_tasks: int = 1             # >1 => task-specific gating networks
+    expert_kind: str = "swiglu"    # "gelu" | "swiglu"
+    num_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    group_size: int = 4096         # tokens routed per independent group
+    impl: str = "grouped"          # "grouped" | "onehot"
+    renormalize: bool = True
+    use_lut: bool = False          # LUT activation (paper technique #3)
+    use_pallas: bool = False
+
+    def capacity(self, tokens_per_group: int) -> int:
+        c = int(tokens_per_group * self.top_k * self.capacity_factor
+                / self.num_experts) + 1
+        return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict[str, Any]:
+    ks = jax.random.split(key, 8)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s = 1.0 / jnp.sqrt(d)
+    sf = 1.0 / jnp.sqrt(f)
+    p: dict[str, Any] = {
+        # (tasks, d, E): per-task gating networks, switched by index (§IV-F)
+        "gate": (jax.random.normal(ks[0], (cfg.num_tasks, d, e)) * s).astype(jnp.float32),
+    }
+    if cfg.expert_kind == "swiglu":
+        p["wg"] = (jax.random.normal(ks[1], (e, d, f)) * s).astype(dtype)
+        p["wu"] = (jax.random.normal(ks[2], (e, d, f)) * s).astype(dtype)
+        p["wd"] = (jax.random.normal(ks[3], (e, f, d)) * sf).astype(dtype)
+    else:
+        p["w1"] = (jax.random.normal(ks[1], (e, d, f)) * s).astype(dtype)
+        p["b1"] = jnp.zeros((e, f), jnp.float32)
+        p["w2"] = (jax.random.normal(ks[3], (e, f, d)) * sf).astype(dtype)
+        p["b2"] = jnp.zeros((e, d), jnp.float32)
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_wg"] = (jax.random.normal(ks[4], (d, fs)) * s).astype(dtype)
+        p["shared_wu"] = (jax.random.normal(ks[5], (d, fs)) * s).astype(dtype)
+        p["shared_wd"] = (jax.random.normal(ks[6], (fs, d)) * sf).astype(dtype)
+    return p
+
+
+def _expert_ffn(params, cfg: MoEConfig, buf: jax.Array,
+                group_sizes: jax.Array | None = None) -> jax.Array:
+    """Apply every expert's MLP to its buffer: (E, C, d) -> (E, C, d).
+
+    One einsum per projection = the grouped GEMM; expert e's weights are used
+    exactly once for its whole queue (the paper's weight-reuse guarantee).
+    With ``use_pallas`` the grouped GEMM is the Pallas ``moe_gemm`` kernel,
+    whose scalar-prefetch ``group_sizes`` realize the metaqueue skip.
+    """
+    act = "silu" if cfg.expert_kind == "swiglu" else "gelu"
+    from repro.core.gelu import get_activation
+
+    a = get_activation(act, cfg.use_lut)
+    if cfg.use_pallas and group_sizes is not None:
+        from repro.kernels import ops as _kops
+
+        def gemm(x, w):
+            return _kops.moe_gemm(x, w, group_sizes).astype(jnp.float32)
+    else:
+        def gemm(x, w):
+            return jnp.einsum("ecd,edf->ecf", x, w,
+                              preferred_element_type=jnp.float32)
+    if cfg.expert_kind == "swiglu":
+        g = gemm(buf, params["wg"])
+        u = gemm(buf, params["wu"])
+        h = (a(g) * u).astype(buf.dtype)
+        return gemm(h, params["wd"]).astype(buf.dtype)
+    h = gemm(buf, params["w1"])
+    h = a(h + params["b1"][:, None, :]).astype(buf.dtype)
+    o = gemm(h, params["w2"])
+    return (o + params["b2"][:, None, :]).astype(buf.dtype)
+
+
+def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0):
+    """x: (..., T, d) -> (y, aux_loss).  Routes per group of ``group_size``.
+
+    Tokens are reshaped into independent routing groups (GShard convention) so
+    capacity is a local property — this is also what makes the dispatch
+    shardable over the data axis at pod scale.
+
+    ``impl="ep_local"`` (requires an active mesh with a ``model`` axis)
+    switches to the explicit expert-parallel schedule below.
+    """
+    if cfg.impl == "ep_local":
+        from repro.dist.sharding import current_rules
+
+        rules = current_rules()
+        if rules is not None and rules.mesh is not None \
+                and "model" in rules.mesh.axis_names:
+            return apply_moe_ep_local(params, cfg, x, rules.mesh,
+                                      task_id=task_id)
+        cfg = replace_impl(cfg, "grouped")   # no mesh: single-device fallback
+    orig_shape = x.shape
+    d = x.shape[-1]
+    flat = x.reshape(-1, d)
+    t_total = flat.shape[0]
+    g = max(1, min(cfg.group_size, t_total))
+    while t_total % g:
+        g -= 1
+    groups = flat.reshape(t_total // g, g, d)
+    capacity = cfg.capacity(g)
+
+    gate_w = params["gate"]
+    if gate_w.ndim == 3:  # (tasks, d, E) — select the active task's gate
+        gate_w = jax.lax.dynamic_index_in_dim(
+            gate_w, jnp.asarray(task_id, jnp.int32), axis=0, keepdims=False)
+
+    def per_group(xg):
+        with jax.named_scope("moe_gate"):
+            logits = jnp.einsum("td,de->te", xg.astype(jnp.float32), gate_w)
+            r = R.route(logits, cfg.top_k, capacity, renormalize=cfg.renormalize)
+            # per-expert queue lengths (metaqueue): experts with 0 are skipped
+            group_sizes = jnp.zeros((cfg.num_experts,), jnp.int32).at[
+                r.expert.reshape(-1)].add(r.valid.reshape(-1).astype(jnp.int32))
+        with jax.named_scope("moe_dispatch"):
+            if cfg.impl == "onehot":
+                buf = R.dispatch_onehot(xg, r, cfg.num_experts, capacity)
+            else:
+                buf = R.dispatch(xg, r, cfg.num_experts, capacity)
+        with jax.named_scope("moe_ffn"):
+            out = _expert_ffn(params, cfg, buf, group_sizes)
+        with jax.named_scope("moe_combine"):
+            if cfg.impl == "onehot":
+                y = R.combine_onehot(out, r)
+            else:
+                y = R.combine(out, r)
+            aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts)
+        return y.astype(x.dtype), aux
+
+    y, aux = jax.vmap(per_group)(groups)
+    y = y.reshape(orig_shape)
+
+    if cfg.num_shared_experts:
+        with jax.named_scope("moe_shared"):
+            gshared = unified_linear(x, params["shared_wg"], activation="silu",
+                                     use_lut=cfg.use_lut)
+            ushared = unified_linear(x, params["shared_wu"])
+            y = y + unified_linear((gshared * ushared).astype(x.dtype),
+                                   params["shared_wd"])
+    return y, aux.mean()
+
+
+def replace_impl(cfg: MoEConfig, impl: str) -> MoEConfig:
+    from dataclasses import replace
+
+    return replace(cfg, impl=impl)
+
+
+def apply_moe_ep_local(params, cfg: MoEConfig, x: jax.Array, mesh,
+                       task_id=0):
+    """Explicit expert parallelism (shard_map) — the pod-scale form of the
+    paper's expert-by-expert reordering.
+
+    Layout: experts sharded over ``model`` (each chip keeps E/|model|
+    RESIDENT experts — "load each expert once", permanently); tokens stay
+    data-sharded and replicated over ``model``.  Each chip routes its local
+    tokens, keeps only the slots that picked one of ITS resident experts
+    (the local per-expert queues), runs the grouped GEMM on them, and the
+    cross-chip combine is a single ``psum`` of the partial outputs over the
+    model axis — each token's top-k contributions arrive from the k owning
+    shards.
+
+    vs the GSPMD grouped path this removes every dispatch gather/scatter
+    collective: communication = one (T_local, d) psum per group (+ the
+    FSDP weight gathers that any layout with data-sharded weights pays).
+    """
+    batch_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    tp = mesh.shape["model"]
+    assert cfg.num_experts % tp == 0, "E must divide the model axis"
+    e_local = cfg.num_experts // tp
+
+    gate = params["gate"]
+    if gate.ndim == 3:
+        gate = jax.lax.dynamic_index_in_dim(
+            gate, jnp.asarray(task_id, jnp.int32), axis=0, keepdims=False)
+
+    expert_keys = [k for k in ("wg", "wu", "wd", "w1", "b1", "w2", "b2")
+                   if k in params]
+    ew = {k: params[k] for k in expert_keys}
+
+    x_spec = jax.sharding.PartitionSpec(
+        batch_axes, *([None] * (x.ndim - 1)))
+    e_spec = jax.tree.map(
+        lambda a: jax.sharding.PartitionSpec("model",
+                                             *([None] * (a.ndim - 1))), ew)
+    rep = jax.sharding.PartitionSpec()
+
+    def body(xg, gate_w, ew_local):
+        lead = xg.shape[:-1]
+        d = xg.shape[-1]
+        flat = xg.reshape(-1, d)
+        t = flat.shape[0]
+        g = max(1, min(cfg.group_size, t))
+        while t % g:
+            g -= 1
+        groups = flat.reshape(t // g, g, d)
+        capacity = cfg.capacity(g)
+        shard = jax.lax.axis_index("model")
+        e_lo = shard * e_local
+
+        def per_group(xg1):
+            with jax.named_scope("moe_gate"):
+                logits = jnp.einsum("td,de->te", xg1.astype(jnp.float32),
+                                    gate_w)
+                r = R.route(logits, cfg.top_k, capacity,
+                            renormalize=cfg.renormalize)
+            with jax.named_scope("moe_dispatch"):
+                # local queues: keep only slots owned by this shard's experts
+                local = (r.expert >= e_lo) & (r.expert < e_lo + e_local)
+                e_loc = jnp.where(local, r.expert - e_lo, 0)
+                r_loc = R.Routing(
+                    expert=e_loc.astype(jnp.int32), gate=r.gate,
+                    position=r.position, valid=r.valid & local,
+                    probs=r.probs)
+                sizes = jnp.zeros((e_local,), jnp.int32).at[
+                    r_loc.expert.reshape(-1)].add(
+                        r_loc.valid.reshape(-1).astype(jnp.int32))
+                buf = R.dispatch(xg1, r_loc, e_local, capacity)
+            with jax.named_scope("moe_ffn"):
+                out = _expert_ffn(params_local(ew_local), cfg, buf, sizes)
+            with jax.named_scope("moe_combine"):
+                y = R.combine(out, r_loc)
+                # full combine = psum of per-shard partials over experts
+                y = jax.lax.psum(y, "model")
+                aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts)
+            return y.astype(xg1.dtype), aux
+
+        y, aux = jax.vmap(per_group)(groups)
+        aux = aux.mean()
+        for ax in batch_axes:                 # aux is per-data-shard local
+            aux = jax.lax.pmean(aux, ax)
+        return y.reshape(lead + (d,)), aux[None]
+
+    def params_local(ew_local):
+        return ew_local
+
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(x_spec, rep, e_spec),
+        out_specs=(x_spec, rep),
+        check_vma=False)
+    y, aux = fn(x, gate, ew)
+    y = y.astype(x.dtype)
+
+    if cfg.num_shared_experts:
+        with jax.named_scope("moe_shared"):
+            gshared = unified_linear(x, params["shared_wg"], activation="silu",
+                                     use_lut=cfg.use_lut)
+            ushared = unified_linear(x, params["shared_wu"])
+            y = y + unified_linear((gshared * ushared).astype(x.dtype),
+                                   params["shared_wd"])
+    return y, aux.mean()

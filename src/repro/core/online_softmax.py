@@ -1,0 +1,134 @@
+"""Single-pass softmax with dynamic bias (Edge-MoE §IV-B, Algorithm 1).
+
+The paper computes softmax over fixed-point hardware in ONE pass by carrying a
+running bias ``b = max(x_1..x_j)`` and a running denominator
+``s = sum exp(x - b)`` that is rescaled by ``exp(b_old - b_new)`` whenever a new
+maximum arrives.  "Pass 3" (the final ``exp(x_i - b)/s``) is fused into the
+consumer of the scores (the M'xV product in attention).
+
+On TPU the same recurrence is the numerical core of blocked flash attention:
+the (m, l) carry that rescales the PV accumulator between K-blocks.  Here we
+provide:
+
+  * ``online_max_sum``      — Algorithm 1 verbatim, element-at-a-time via lax.scan
+                              (the oracle used by tests; O(N) sequential).
+  * ``online_max_sum_blocked`` — the block-parallel form used by the kernels:
+                              process the sequence in chunks, combining
+                              (m, s) carries with the associative merge rule.
+  * ``softmax``             — full softmax built on the one-pass statistics with
+                              the exp/div "Pass 3" applied at the end (the
+                              consumer-fusion is done inside the attention op).
+  * ``merge_stats``         — the associative combine for two (m, s) pairs; this
+                              is also what a sequence-parallel (ring) softmax
+                              uses to merge per-shard partial statistics.
+
+All math is exact (the bias cancels algebraically, Eq. 3 of the paper), so
+every path must match ``jax.nn.softmax`` to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "online_max_sum",
+    "online_max_sum_blocked",
+    "merge_stats",
+    "softmax",
+]
+
+
+def online_max_sum(x: jax.Array, axis: int = -1):
+    """Algorithm 1 of the paper: one sequential pass computing (b, s).
+
+    Returns (b, s) with ``b = max(x, axis)`` and ``s = sum(exp(x - b), axis)``.
+    Written exactly as the paper's per-element update so tests can check the
+    blocked/parallel forms against it.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+
+    def step(carry, xj):
+        b, s = carry
+        # if x_j > b:  s <- s * exp(b - x_j) + 1 ; b <- x_j
+        # else:        s <- s + exp(x_j - b)
+        new_max = xj > b
+        s = jnp.where(new_max, s * jnp.exp(b - xj) + 1.0, s + jnp.exp(xj - b))
+        b = jnp.maximum(b, xj)
+        return (b, s), None
+
+    init_b = jnp.full(x.shape[1:], -jnp.inf, dtype=x.dtype)
+    init_s = jnp.zeros(x.shape[1:], dtype=x.dtype)
+    (b, s), _ = jax.lax.scan(step, (init_b, init_s), x)
+    return b, s
+
+
+def merge_stats(m_a, s_a, m_b, s_b):
+    """Associative merge of two one-pass softmax carries.
+
+    (m, s) summarize a set of scores: m = max, s = sum exp(x - m).  Merging two
+    disjoint sets rescales each sum onto the joint max — the same rescaling
+    Algorithm 1 applies one element at a time, applied block-at-a-time.  Also
+    the combine function for sequence-parallel attention (ring softmax).
+    """
+    m = jnp.maximum(m_a, m_b)
+    # Guard exp(-inf - -inf): where both sides are empty the sum stays 0.
+    s = s_a * jnp.exp(jnp.where(jnp.isneginf(m_a), -jnp.inf, m_a - m)) + s_b * jnp.exp(
+        jnp.where(jnp.isneginf(m_b), -jnp.inf, m_b - m)
+    )
+    return m, s
+
+
+def online_max_sum_blocked(x: jax.Array, axis: int = -1, block: int = 128):
+    """Blocked one-pass (b, s): scan over chunks, merge carries per chunk.
+
+    This is the schedule the Pallas attention kernel uses across K blocks; on
+    the jnp path it exists so tests can validate the carry algebra at any block
+    size (including block sizes that do not divide N — the tail is padded with
+    -inf which contributes exp(-inf)=0, mirroring the kernel's masked tail).
+    """
+    x = jnp.moveaxis(x, axis, 0)
+    n = x.shape[0]
+    nblocks = -(-n // block)
+    pad = nblocks * block - n
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.full((pad,) + x.shape[1:], -jnp.inf, dtype=x.dtype)], axis=0
+        )
+    xb = x.reshape((nblocks, block) + x.shape[1:])
+
+    def step(carry, xblk):
+        m, s = carry
+        m_blk = jnp.max(xblk, axis=0)
+        s_blk = jnp.sum(jnp.exp(xblk - m_blk), axis=0)
+        # A fully padded block has m_blk = -inf, s_blk = 0 -> merge is a no-op.
+        s_blk = jnp.where(jnp.isneginf(m_blk), 0.0, s_blk)
+        return merge_stats(m, s, m_blk, s_blk), None
+
+    init_m = jnp.full(x.shape[1:], -jnp.inf, dtype=x.dtype)
+    init_s = jnp.zeros(x.shape[1:], dtype=x.dtype)
+    (m, s), _ = jax.lax.scan(step, (init_m, init_s), xb)
+    return m, s
+
+
+def softmax(x: jax.Array, axis: int = -1, where=None, block: int | None = None):
+    """Softmax via the single-pass statistics (numerically = jax.nn.softmax).
+
+    ``where`` masks elements out of the distribution (they receive prob 0),
+    used for causal/window masks and for the MoE gating softmax over a
+    restricted expert set.
+    """
+    if where is not None:
+        x = jnp.where(where, x, -jnp.inf)
+    if block is None:
+        b = jnp.max(x, axis=axis, keepdims=True)
+        s = jnp.sum(jnp.exp(x - b), axis=axis, keepdims=True)
+    else:
+        b, s = online_max_sum_blocked(x, axis=axis, block=block)
+        b = jnp.expand_dims(b, axis)
+        s = jnp.expand_dims(s, axis)
+    # "Pass 3", fused into the consumer in the attention op; standalone here.
+    out = jnp.exp(x - b) / jnp.maximum(s, jnp.finfo(x.dtype).tiny)
+    if where is not None:
+        out = jnp.where(where, out, 0.0)
+    return out

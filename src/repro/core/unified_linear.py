@@ -1,0 +1,92 @@
+"""Unified linear layer (Edge-MoE §IV-E).
+
+The paper consolidates *every* linear layer in the model — attention QKV/out
+projections, ViT-block MLPs, MoE expert MLPs, patch embedding — into one
+flexible compute module with run-time configuration:
+
+  * variable input/output dimensions (the manually flattened HLS loop),
+  * dense inputs or sparse token-indexed inputs (per-expert queues),
+  * optional fused activation before the write-back,
+  * weighted accumulation onto an existing output buffer (MoE combine),
+  * a widened bias datatype covering the range/precision of all callers.
+
+On TPU the resource argument (share DSPs/LUTs) becomes a *code-path and
+schedule* argument: one blocked GEMM kernel = one tuned tile schedule reused
+everywhere, epilogue fusion (bias+activation) avoids an extra HBM round trip,
+and the widened bias maps to f32 bias/accumulator with bf16 weights.  Every
+model in this repo funnels its projections through :func:`unified_linear`, so
+enabling the Pallas kernel or changing the precision policy is one switch.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gelu import get_activation
+
+__all__ = ["unified_linear", "sparse_linear", "Linear"]
+
+
+def unified_linear(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array | None = None,
+    *,
+    activation: str | None = None,
+    use_lut: bool = False,
+    token_index: jax.Array | None = None,
+    accum_out: jax.Array | None = None,
+    accum_weight: jax.Array | None = None,
+    use_pallas: bool = False,
+    preferred_dtype=jnp.float32,
+) -> jax.Array:
+    """y = act(x @ w + b), with optional sparse gather / weighted accumulate.
+
+    x: (..., T, in_dim); w: (in_dim, out_dim); b: (out_dim,) kept in f32 (the
+    "widened bias type").  When ``token_index`` (T',) is given, rows are
+    gathered from x before the GEMM (the indirect/sparse reader of the paper).
+    When ``accum_out``/``accum_weight`` are given, the result is scaled by the
+    per-token weight and added onto the existing buffer (the indirect writer's
+    weighted accumulation used by MoE combine).
+    """
+    if token_index is not None:
+        x = jnp.take(x, token_index, axis=-2)
+    if use_pallas and x.ndim == 2 and accum_out is None:
+        from repro.kernels import ops as _kops
+
+        y = _kops.unified_linear(x, w, b, activation=activation, use_lut=use_lut)
+    else:
+        y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
+        if b is not None:
+            y = y + b.astype(preferred_dtype)
+        y = get_activation(activation, use_lut)(y)
+        y = y.astype(x.dtype)
+    if accum_out is not None:
+        scaled = y if accum_weight is None else y * accum_weight[..., None].astype(y.dtype)
+        if token_index is not None:
+            return accum_out.at[..., token_index, :].add(scaled.astype(accum_out.dtype))
+        return accum_out + scaled.astype(accum_out.dtype)
+    return y
+
+
+def sparse_linear(x, w, b, token_index, **kw):
+    """Convenience wrapper matching the paper's sparse-input mode."""
+    return unified_linear(x, w, b, token_index=token_index, **kw)
+
+
+class Linear:
+    """Parameter helper: init + apply through the unified module."""
+
+    @staticmethod
+    def init(key, in_dim, out_dim, *, bias=True, dtype=jnp.bfloat16, scale=None):
+        scale = scale if scale is not None else (1.0 / jnp.sqrt(in_dim))
+        w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+        p = {"w": w.astype(dtype)}
+        if bias:
+            p["b"] = jnp.zeros((out_dim,), dtype=jnp.float32)  # widened bias
+        return p
+
+    @staticmethod
+    def apply(params, x, **kw):
+        return unified_linear(x, params["w"], params.get("b"), **kw)

@@ -1,0 +1,8 @@
+from repro.data.pipeline import (
+    DataConfig,
+    SyntheticLMStream,
+    SyntheticM3ViTStream,
+    make_stream,
+)
+
+__all__ = ["DataConfig", "SyntheticLMStream", "SyntheticM3ViTStream", "make_stream"]

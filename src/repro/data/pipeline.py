@@ -1,0 +1,165 @@
+"""Deterministic, restart-safe synthetic data pipeline.
+
+Fault-tolerance contract: a batch is a *pure function of (seed, step)* —
+``stream.batch(step)`` always returns the same batch for the same config, so
+a training run restarted from a step-``k`` checkpoint reconstructs exactly
+the batches it would have seen (no iterator state to persist).  This is the
+counted/seedable stream DESIGN.md §5 relies on.
+
+Two generators:
+
+  * :class:`SyntheticLMStream` — token LM batches with a learnable structure
+    (orderk-Markov-ish mixture so the loss actually goes down; pure noise
+    would make the end-to-end example meaningless).  For ``embeddings``-input
+    archs (modality-frontend stubs) it emits (B, S, d) float embeddings.
+  * :class:`SyntheticM3ViTStream` — Cityscapes-shaped multi-task batches
+    (image, semseg labels, depth labels) for the paper's own model.
+
+Host-side prefetch (`prefetch`) double-buffers device puts on a thread —
+the single-process analogue of an input pipeline that hides data latency
+behind the step; at pod scale each process feeds only its addressable shard
+(``shard_for``).
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+from dataclasses import dataclass
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLMStream", "SyntheticM3ViTStream",
+           "make_stream", "prefetch"]
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    batch: int
+    seq_len: int
+    vocab_size: int = 0          # 0 => embeddings input (frontend stub)
+    d_model: int = 0             # used when vocab_size == 0
+    seed: int = 0
+    kind: str = "lm"             # lm | m3vit
+    image_hw: tuple = (128, 256)
+    num_seg_classes: int = 19
+
+
+class SyntheticLMStream:
+    """Batches are pure functions of (seed, step): restart == replay."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # fixed mixing matrix gives the stream learnable bigram structure
+        if cfg.vocab_size:
+            r = np.random.default_rng(cfg.seed ^ 0x5EED)
+            self._next_tok = r.integers(
+                0, cfg.vocab_size, size=(cfg.vocab_size,), dtype=np.int64)
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        r = np.random.default_rng((cfg.seed << 20) ^ step)
+        if cfg.vocab_size == 0:
+            x = r.normal(size=(cfg.batch, cfg.seq_len, cfg.d_model)).astype(
+                np.float32)
+            labels = r.integers(0, max(cfg.d_model, 2),
+                                size=(cfg.batch, cfg.seq_len)).astype(np.int32)
+            return {"inputs": x, "labels": labels}
+        # 75% deterministic bigram continuation + 25% noise -> learnable
+        toks = np.empty((cfg.batch, cfg.seq_len), dtype=np.int64)
+        toks[:, 0] = r.integers(0, cfg.vocab_size, size=(cfg.batch,))
+        noise = r.integers(0, cfg.vocab_size, size=(cfg.batch, cfg.seq_len))
+        use_noise = r.random((cfg.batch, cfg.seq_len)) < 0.25
+        for t in range(1, cfg.seq_len):
+            nxt = self._next_tok[toks[:, t - 1]]
+            toks[:, t] = np.where(use_noise[:, t], noise[:, t], nxt)
+        inputs = toks[:, :].astype(np.int32)
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((cfg.batch, 1), -100, dtype=np.int64)],
+            axis=1).astype(np.int32)
+        return {"inputs": inputs, "labels": labels}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class SyntheticM3ViTStream:
+    """Multi-task (image, semseg, depth) batches for the paper's M³ViT."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch(self, step: int) -> dict:
+        cfg = self.cfg
+        h, w = cfg.image_hw
+        r = np.random.default_rng((cfg.seed << 20) ^ step)
+        # piecewise-constant "scenes": blocks of consistent class + depth, so
+        # both tasks are learnable from local texture
+        bh, bw = h // 8, w // 8
+        cls = r.integers(0, cfg.num_seg_classes, size=(cfg.batch, bh, bw))
+        cls_full = np.repeat(np.repeat(cls, 8, axis=1), 8, axis=2)
+        depth = (cls_full.astype(np.float32) + 1.0) / cfg.num_seg_classes
+        img = (cls_full[..., None].astype(np.float32) / cfg.num_seg_classes
+               + 0.1 * r.normal(size=(cfg.batch, h, w, 3))).astype(np.float32)
+        return {"image": img, "semseg": cls_full.astype(np.int32),
+                "depth": depth.astype(np.float32)}
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def make_stream(cfg: DataConfig):
+    return SyntheticM3ViTStream(cfg) if cfg.kind == "m3vit" else SyntheticLMStream(cfg)
+
+
+def shard_for(batch: dict, mesh, batch_axes=("pod", "data")) -> dict:
+    """Device-put a host batch with the batch dim sharded over the mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    axes = tuple(a for a in batch_axes if a in mesh.axis_names)
+
+    def put(x):
+        spec = P(axes, *([None] * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree.map(put, batch)
+
+
+def prefetch(stream, n: int = 2, start_step: int = 0, transform=None):
+    """Thread-backed prefetch: yields (step, batch), ``n`` batches ahead.
+
+    ``transform`` (e.g. ``shard_for``) runs on the producer thread so device
+    puts overlap the consumer's step.
+    """
+    q: queue.Queue = queue.Queue(maxsize=n)
+    stop = threading.Event()
+
+    def producer():
+        step = start_step
+        while not stop.is_set():
+            b = stream.batch(step)
+            if transform is not None:
+                b = transform(b)
+            q.put((step, b))
+            step += 1
+
+    t = threading.Thread(target=producer, daemon=True)
+    t.start()
+    try:
+        while True:
+            yield q.get()
+    finally:
+        stop.set()
+        try:  # unblock a producer waiting on a full queue
+            q.get_nowait()
+        except queue.Empty:
+            pass

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  flash_attention — attention reordering (①) + single-pass softmax (②)
+  unified_linear  — one blocked GEMM for every linear layer (④, fuses ③)
+  moe_gemm        — expert-by-expert grouped GEMM with metaqueue skip (⑤)
+  gelu_lut        — standalone LUT activation (③)
+
+``ops`` holds the jit'd public wrappers; ``ref`` the pure-jnp oracles.
+On CPU all kernels run in ``interpret=True`` mode.
+"""

@@ -1,0 +1,157 @@
+"""Pallas flash-attention kernel — the paper's attention reordering on TPU.
+
+Edge-MoE §IV-A caches ``p`` Q rows on-chip and streams K (then M′ and V) past
+them once, making bandwidth constant in the parallelism.  On TPU the same
+reuse schedule is a tiled kernel: a VMEM-resident Q tile (``block_q`` = the
+paper's p) stays fixed while K/V tiles stream from HBM; every K/V tile is
+multiplied against the whole resident Q tile (the paper's reuse argument),
+and the single-pass softmax carry (§IV-B, Algorithm 1) rescales a float32 PV
+accumulator between K tiles — "Pass 3"'s exp/div fused into the M′×V consumer.
+
+Grid: ``(B, Hq, num_q_blocks, num_k_blocks)`` with the K-block axis innermost
+(sequential on TPU), so the (m, l, acc) scratch carries across K tiles of one
+Q tile.  GQA is handled in the K/V index maps (query head h reads kv head
+``h // group``) — no materialized broadcast.  Causal/sliding-window masks are
+applied per-tile from absolute positions; K tiles that are fully masked for
+the resident Q tile are *skipped* (``pl.when``), which implements both causal
+early-exit and the bounded look-back of local attention.
+
+MXU alignment: block_q/block_k default to 128 (the MXU systolic dim); head_dim
+is zero-padded to a multiple of 128 by the wrapper in ``ops.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_call"]
+
+NEG_INF = -1e30
+LANES = 128  # f32 VREG lane count: m/l scratch is (block_q, LANES)
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref,          # (1, 1, bq, d), (1, 1, bk, d), (1, 1, bk, d)
+    o_ref,                        # (1, 1, bq, d)
+    m_scr, l_scr, acc_scr,        # VMEM scratch
+    *,
+    sq: int, skv: int, q_offset: int,
+    causal: bool, window: int | None, scale: float,
+    block_q: int, block_k: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # absolute positions of the resident Q tile and the streamed K tile
+    q_lo = qi * block_q + q_offset
+    k_lo = ki * block_k
+
+    # tile-level skip: the "metaqueue" of K tiles this Q tile actually needs
+    needed = k_lo < skv  # padded K tail tiles are never needed
+    if causal:
+        needed &= k_lo <= q_lo + block_q - 1
+    if window is not None:
+        needed &= (k_lo + block_k - 1) > q_lo - window
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, bk)
+
+        qpos = q_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_lo + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        ok = kpos < skv                                      # mask padded K tail
+        if causal:
+            ok &= kpos <= qpos
+        if window is not None:
+            ok &= kpos > qpos - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[:, :1]                                # (bq, 1)
+        m_blk = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_blk)
+        # Algorithm 1 blockwise: rescale the carried sum & accumulator
+        alpha = jnp.exp(m_prev - m_new)                      # (bq, 1)
+        p = jnp.exp(s - m_new)                               # (bq, bk)
+        p = jnp.where(ok, p, 0.0)
+        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (bq, d)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = l_scr[:, :1]
+        out = acc_scr[...] / jnp.maximum(l, 1e-37)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_call(
+    q, k, v, *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    scale: float,
+    block_q: int = 128,
+    block_k: int = 128,
+    sq_orig: int,
+    skv_orig: int,
+    interpret: bool = True,
+):
+    """Raw pallas_call on padded inputs.  Use ``ops.flash_attention`` instead.
+
+    q: (B, Hq, Sq_pad, D); k, v: (B, Hkv, Skv_pad, D); Sq_pad % block_q == 0,
+    Skv_pad % block_k == 0, D % 128 == 0.  GQA via K/V index maps.
+    """
+    b, hq, sq_pad, d = q.shape
+    hkv = k.shape[1]
+    skv_pad = k.shape[2]
+    group = hq // hkv
+    nq = sq_pad // block_q
+    nk = skv_pad // block_k
+
+    kernel = functools.partial(
+        flash_attention_kernel,
+        sq=sq_orig, skv=skv_orig, q_offset=q_offset, causal=causal,
+        window=window, scale=scale, block_q=block_q, block_k=block_k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, d), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, d),
+                         lambda b, h, qi, ki: (b, h // group, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, d),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # m
+            pltpu.VMEM((block_q, LANES), jnp.float32),   # l
+            pltpu.VMEM((block_q, d), jnp.float32),       # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,58 @@
+"""Pallas LUT-activation kernel — Edge-MoE §IV-C on the VPU.
+
+GELU(x) ≈ ReLU(x) − δ(|x|) with δ tabulated on a power-of-two grid
+(index = bit shift), even symmetry (half table), truncated support
+(|x| > range ⇒ δ = 0 ⇒ exact ReLU).  On TPU the table is a small VMEM
+resident (2048 f32 entries = 8 KiB at the default 2⁻⁸ step / range 8) and
+the lookup is a vectorized dynamic gather on the VPU.
+
+The kernel is elementwise: the wrapper flattens/pads x to (rows, 128) and
+tiles rows; the table rides along as a whole-block input replicated to every
+grid step (it never leaves VMEM — the paper's "stored in ROM").
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["lut_activation_kernel", "lut_activation_call"]
+
+
+def lut_activation_kernel(x_ref, table_ref, o_ref, *, step_log2: int):
+    x = x_ref[...]
+    table = table_ref[0]                          # (n_entries,)
+    n = table.shape[0]
+    ax = jnp.abs(x.astype(jnp.float32))
+    # bit-shift indexing: |x| * 2^-step_log2, rounded to the nearest entry
+    idx = jnp.round(ax * (2.0 ** (-step_log2))).astype(jnp.int32)
+    in_range = idx < n
+    idx = jnp.minimum(idx, n - 1)
+    delta = jnp.take(table, idx)
+    delta = jnp.where(in_range, delta, 0.0)       # truncated support ⇒ ReLU
+    y = jnp.maximum(x.astype(jnp.float32), 0.0) - delta
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def lut_activation_call(x2d, table, *, step_log2: int = -8,
+                        block_rows: int = 256, interpret: bool = True):
+    """x2d: (R, 128) padded; table: (n,) f32.  Returns act(x2d)."""
+    rows = x2d.shape[0]
+    lanes = x2d.shape[1]
+    nb = rows // block_rows
+    table2d = table[None, :]                      # (1, n) — 2D for TPU layout
+    kernel = functools.partial(lut_activation_kernel, step_log2=step_log2)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+            pl.BlockSpec((1, table.shape[0]), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, lanes), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x2d.shape, x2d.dtype),
+        interpret=interpret,
+    )(x2d, table2d)

@@ -1,0 +1,80 @@
+"""Pallas grouped-GEMM kernel — Edge-MoE §IV-D expert-by-expert sweep.
+
+The paper processes MoE expert-by-expert: per-expert token queues are built
+during gating, a *metaqueue* lists experts with non-empty queues, and each
+listed expert's weights are loaded exactly once to compute its whole queue.
+
+On TPU the queues are the rows of the (E, C, d) dispatch buffer (tokens
+grouped per expert by ``core/routing.py``), the sweep is this grouped GEMM,
+and the metaqueue is a scalar-prefetch array of per-expert queue lengths:
+experts with ``size == 0`` are skipped with ``pl.when`` — the MXU never sees
+them and (on real hardware) their weight tiles are never pulled from HBM,
+which is the paper's "skip the loading step of any experts not used".
+
+Grid ``(E, nc, nf, nk)``, K innermost, f32 VMEM accumulator. The expert axis
+is the outer grid dim, so each expert's weight tiles are resident across its
+whole queue — "load each expert once", tile-granular.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["moe_gemm_kernel", "moe_gemm_call"]
+
+
+def moe_gemm_kernel(sizes_ref, buf_ref, w_ref, o_ref, acc_scr):
+    e = pl.program_id(0)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+    active = sizes_ref[e] > 0                     # the metaqueue membership
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(active)
+    def _compute():
+        acc_scr[...] += jax.lax.dot_general(
+            buf_ref[0].astype(jnp.float32), w_ref[0].astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _write():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def moe_gemm_call(buf, w, group_sizes, *,
+                  block_c: int = 128, block_f: int = 256, block_k: int = 512,
+                  interpret: bool = True):
+    """Raw call on padded operands.  Use ``ops.moe_gemm`` instead.
+
+    buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 queue lengths.
+    C % block_c == F % block_f == D % block_k == 0 (wrapper pads).
+    """
+    e, c, d = buf.shape
+    f = w.shape[2]
+    nc, nf, nk = c // block_c, f // block_f, d // block_k
+    return pl.pallas_call(
+        moe_gemm_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(e, nc, nf, nk),
+            in_specs=[
+                pl.BlockSpec((1, block_c, block_k),
+                             lambda e, ci, fi, ki, sz: (e, ci, ki)),
+                pl.BlockSpec((1, block_k, block_f),
+                             lambda e, ci, fi, ki, sz: (e, ki, fi)),
+            ],
+            out_specs=pl.BlockSpec((1, block_c, block_f),
+                                   lambda e, ci, fi, ki, sz: (e, ci, fi)),
+            scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((e, c, f), buf.dtype),
+        interpret=interpret,
+    )(group_sizes, buf, w)

@@ -1,0 +1,148 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+Each wrapper pads operands to kernel tile multiples (MXU-aligned: multiples
+of 128 on matmul dims), invokes the raw ``*_call``, and slices the result.
+On this CPU container kernels execute in ``interpret=True`` mode (the kernel
+body runs as traced Python — bit-faithful to the TPU schedule, used by the
+allclose tests); on a TPU backend they compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gelu import _cached_table
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gelu_lut as _gl
+from repro.kernels import moe_gemm as _mg
+from repro.kernels import unified_linear as _ul
+
+__all__ = ["flash_attention", "unified_linear", "moe_gemm", "lut_activation"]
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x, mult: int, axis: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+# ------------------------------------------------------------ attention
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "scale", "block_q", "block_k"),
+)
+def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
+                    scale=None, block_q=128, block_k=128):
+    """Tiled flash attention (paper technique ①+②).
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    bq = min(block_q, max(8, 1 << (sq - 1).bit_length()))
+    bk = min(block_k, max(8, 1 << (skv - 1).bit_length()))
+    qp = _pad_to(q, bq, 2)
+    kp = _pad_to(k, bk, 2)
+    vp = _pad_to(v, bk, 2)
+    dp = (-d) % 128
+    if dp:
+        qp = _pad_to(qp, 128, 3)
+        kp = _pad_to(kp, 128, 3)
+        vp = _pad_to(vp, 128, 3)
+    out = _fa.flash_attention_call(
+        qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
+        scale=scale, block_q=bq, block_k=bk, sq_orig=sq, skv_orig=skv,
+        interpret=_interpret())
+    return out[:, :, :sq, :d]
+
+
+# ------------------------------------------------------------ unified linear
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("activation", "use_lut", "block_m", "block_n", "block_k"),
+)
+def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
+                   block_m=256, block_n=256, block_k=512):
+    """One blocked GEMM for every linear layer (technique ④, fused ③).
+
+    x: (..., K); w: (K, N); b: (N,) f32 or None.  Leading dims are flattened
+    into M (the paper's dense reader), padded to tile multiples, restored.
+    """
+    lead = x.shape[:-1]
+    kdim = x.shape[-1]
+    n = w.shape[1]
+    x2 = x.reshape(-1, kdim)
+    m = x2.shape[0]
+    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
+    bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
+    bk = min(block_k, max(128, 1 << (kdim - 1).bit_length()))
+    xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
+    bp = None if b is None else _pad_to(b.astype(jnp.float32), bn, 0)
+    table = jnp.asarray(_cached_table(activation or "gelu", -8, 8.0)) \
+        if activation in ("gelu", "silu") else jnp.zeros((8,), jnp.float32)
+    y = _ul.unified_linear_call(
+        xp, wp, bp, table, activation=activation, use_lut=use_lut,
+        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+    return y[:m, :n].reshape(*lead, n)
+
+
+# ------------------------------------------------------------ moe grouped gemm
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k"))
+def moe_gemm(buf, w, group_sizes, *, block_c=128, block_f=256, block_k=512):
+    """Expert-by-expert grouped GEMM (technique ⑤): out[e] = buf[e] @ w[e].
+
+    buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 — experts with an
+    empty queue are skipped (the metaqueue).
+    """
+    e, c, d = buf.shape
+    f = w.shape[2]
+    bc = min(block_c, max(8, 1 << (c - 1).bit_length()))
+    bf = min(block_f, max(128, 1 << (f - 1).bit_length()))
+    bk = min(block_k, max(128, 1 << (d - 1).bit_length()))
+    bufp = _pad_to(_pad_to(buf, bc, 1), bk, 2)
+    wp = _pad_to(_pad_to(w, bk, 1), bf, 2)
+    out = _mg.moe_gemm_call(bufp, wp, group_sizes.astype(jnp.int32),
+                            block_c=bc, block_f=bf, block_k=bk,
+                            interpret=_interpret())
+    return out[:, :c, :f]
+
+
+# ------------------------------------------------------------ lut activation
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "step_log2", "block_rows"))
+def lut_activation(x, kind="gelu", *, step_log2=-8, block_rows=256):
+    """Standalone LUT activation kernel (technique ③).  Elementwise."""
+    table = jnp.asarray(_cached_table(kind, step_log2, 8.0))
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    lanes = 128
+    rows = -(-n // lanes)
+    br = min(block_rows, max(8, 1 << max(rows - 1, 0).bit_length()))
+    rows_p = -(-rows // br) * br
+    xp = jnp.zeros((rows_p * lanes,), x.dtype).at[:n].set(flat)
+    y = _gl.lut_activation_call(xp.reshape(rows_p, lanes), table,
+                                step_log2=step_log2, block_rows=br,
+                                interpret=_interpret())
+    return y.reshape(-1)[:n].reshape(x.shape)

@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the mathematical specification of the matching kernel,
+written with plain jnp ops (no blocking, no pallas imports).  Kernel tests
+sweep shapes/dtypes and ``assert_allclose`` kernel-vs-oracle.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "ref_attention",
+    "ref_linear",
+    "ref_lut_activation",
+    "ref_moe_gemm",
+]
+
+
+def ref_attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):
+    """Full-score-matrix attention with GQA broadcast; f32 softmax.
+
+    q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
+    """
+    b, hq, sq, d = q.shape
+    hkv = k.shape[1]
+    if hkv != hq:
+        rep = hq // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    skv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(sq)[:, None] + q_offset
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zero output
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def ref_linear(x, w, b=None, *, activation=None, use_lut=False):
+    """y = act(x @ w + b) with f32 accumulation; the unified-linear oracle."""
+    y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        y = y + b.astype(jnp.float32)
+    if activation is not None and activation != "none":
+        lut = use_lut and activation in ("gelu", "silu")
+        y = ref_lut_activation(y, activation) if lut else _exact_act(y, activation)
+    return y.astype(x.dtype)
+
+
+def _exact_act(x, kind):
+    if kind == "relu":
+        return jax.nn.relu(x)
+    if kind == "gelu":
+        return x * 0.5 * (1.0 + jax.lax.erf(x / jnp.sqrt(2.0).astype(x.dtype)))
+    if kind == "silu":
+        return x * jax.nn.sigmoid(x)
+    raise ValueError(kind)
+
+
+def ref_lut_activation(x, kind="gelu", step_log2=-8, rng=8.0):
+    """ReLU(x) - delta(|x|) from the LUT, same math as core.gelu (paper §IV-C)."""
+    from repro.core.gelu import lut_activation
+
+    return lut_activation(x, kind=kind, step_log2=step_log2, rng=rng)
+
+
+def ref_moe_gemm(buf, w, group_sizes=None):
+    """Grouped GEMM: out[e] = buf[e] @ w[e]; experts with size 0 output zeros.
+
+    buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 or None.
+    """
+    out = jnp.einsum("ecd,edf->ecf", buf, w, preferred_element_type=jnp.float32)
+    if group_sizes is not None:
+        out = out * (group_sizes > 0).astype(out.dtype)[:, None, None]
+    return out.astype(buf.dtype)

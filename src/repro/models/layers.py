@@ -1,0 +1,301 @@
+"""Shared model building blocks.
+
+Every projection goes through the unified linear module (paper technique ④),
+attention goes through the blocked/streamed implementation (technique ①+②),
+and activations use the LUT approximation when the config enables it
+(technique ③).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.attention import attention, decode_attention
+from repro.core.unified_linear import unified_linear
+from repro.dist.sharding import constrain
+
+# ---------------------------------------------------------------- norms
+
+
+def init_norm(cfg: ArchConfig, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+@jax.named_scope("norm")
+def apply_norm(params, x, cfg: ArchConfig, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- positions
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x, pos, theta: float):
+    """x: (B, H, S, hd); pos: (B, S) int32. Rotates pairs (even, odd halves)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = pos[:, None, :, None].astype(jnp.float32) * freqs  # (B,1,S,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+MROPE_SECTIONS = (0.25, 0.375, 0.375)  # temporal / height / width fractions
+
+
+def apply_mrope(x, pos3, theta: float):
+    """M-RoPE (Qwen2-VL): hd/2 frequency slots split into (t, h, w) sections,
+    each rotated by its own position stream.  pos3: (3, B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    n_t = int(half * MROPE_SECTIONS[0])
+    n_h = int(half * MROPE_SECTIONS[1])
+    sec = jnp.concatenate([
+        jnp.zeros((n_t,), jnp.int32),
+        jnp.ones((n_h,), jnp.int32),
+        jnp.full((half - n_t - n_h,), 2, jnp.int32),
+    ])
+    # pick the right position stream per frequency slot
+    pos_sel = jnp.take(pos3, sec, axis=0)               # (half, B, S)
+    angles = jnp.einsum("fbs,f->bsf", pos_sel.astype(jnp.float32), freqs)
+    cos = jnp.cos(angles)[:, None, :, :]                # (B,1,S,half)
+    sin = jnp.sin(angles)[:, None, :, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sincos_positions(seq_len: int, d: int, offset=0):
+    """Classic sinusoidal embedding (MusicGen-style), added to inputs."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    freqs = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
+    ang = pos[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def position_encode(x, cfg: ArchConfig, offset=0):
+    if cfg.rope == "sincos":
+        return x + sincos_positions(x.shape[-2], cfg.d_model, offset).astype(x.dtype)
+    return x
+
+
+# ---------------------------------------------------------------- mlp
+
+
+def init_mlp(key, cfg: ArchConfig, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    s, sf = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        return {
+            "wg": (jax.random.normal(ks[0], (d, f)) * s).astype(dtype),
+            "wu": (jax.random.normal(ks[1], (d, f)) * s).astype(dtype),
+            "wd": (jax.random.normal(ks[2], (f, d)) * sf).astype(dtype),
+        }
+    return {  # plain gelu MLP (paper's ViT block)
+        "w1": (jax.random.normal(ks[0], (d, f)) * s).astype(dtype),
+        "b1": jnp.zeros((f,), jnp.float32),
+        "w2": (jax.random.normal(ks[1], (f, d)) * sf).astype(dtype),
+        "b2": jnp.zeros((d,), jnp.float32),
+    }
+
+
+@jax.named_scope("mlp")
+def apply_mlp(params, x, cfg: ArchConfig):
+    lut = cfg.use_lut_activation
+    if cfg.mlp_kind in ("swiglu", "geglu"):
+        act = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
+        g = unified_linear(x, params["wg"], activation=act, use_lut=lut,
+                           use_pallas=cfg.use_pallas)
+        u = unified_linear(x, params["wu"], use_pallas=cfg.use_pallas)
+        h = constrain((g * u).astype(x.dtype), "btf")
+        return unified_linear(h, params["wd"], use_pallas=cfg.use_pallas)
+    h = unified_linear(x, params["w1"], params["b1"], activation="gelu",
+                       use_lut=lut, use_pallas=cfg.use_pallas)
+    h = constrain(h, "btf")
+    return unified_linear(h, params["w2"], params["b2"], use_pallas=cfg.use_pallas)
+
+
+# ---------------------------------------------------------------- attention
+
+
+def init_attention(key, cfg: ArchConfig, dtype):
+    d, hd = cfg.d_model, cfg.hd
+    hq, hkv = cfg.num_heads, cfg.num_kv_heads
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    so = 1.0 / math.sqrt(hq * hd)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, hq * hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d, hkv * hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d, hkv * hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (hq * hd, d)) * so).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((hkv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((hkv * hd,), jnp.float32)
+    return p
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+
+
+def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
+                    window=None, cache=None, cache_index=None):
+    """x: (B, S, d).  Training/prefill when cache is None or being filled;
+    decode (S == 1) when cache_index is given.
+
+    Returns (y, new_cache).  cache = {"k": (B,Hkv,Smax,hd), "v": ...}.
+    """
+    b, s, _ = x.shape
+    hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    with jax.named_scope("attn_qkv"):
+        q = unified_linear(x, params["wq"], params.get("bq"), use_pallas=cfg.use_pallas)
+        k = unified_linear(x, params["wk"], params.get("bk"), use_pallas=cfg.use_pallas)
+        v = unified_linear(x, params["wv"], params.get("bv"), use_pallas=cfg.use_pallas)
+        q = constrain(_split_heads(q, hq, hd), "bhsd")
+        k = constrain(_split_heads(k, hkv, hd), "bkvsd")
+        v = constrain(_split_heads(v, hkv, hd), "bkvsd")
+
+    with jax.named_scope("rope"):
+        if cfg.rope == "rope":
+            q = apply_rope(q, pos, cfg.rope_theta)
+            k = apply_rope(k, pos, cfg.rope_theta)
+        elif cfg.rope == "mrope":
+            pos3 = pos if pos.ndim == 3 else jnp.broadcast_to(pos, (3,) + pos.shape)
+            q = apply_mrope(q, pos3, cfg.rope_theta)
+            k = apply_mrope(k, pos3, cfg.rope_theta)
+
+    new_cache = cache
+    smax = cache["k"].shape[2] if cache is not None else None
+    # ring-buffer cache: windowed layers allocate only `window` slots; token
+    # t lives at slot t % smax.  Attention over a ring is a sum over slots,
+    # so ordering is irrelevant; K/V carry their absolute-position RoPE.
+    ring = (cache is not None and window is not None and smax <= window)
+    if cache is not None and cache_index is not None and s == 1:
+        # decode: write the new token into the cache, attend over it
+        slot = cache_index % smax if ring else cache_index
+        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
+        new_cache = {"k": kc, "v": vc}
+        cache_len = jnp.full((b,), cache_index + 1, jnp.int32)
+        if ring:
+            # every live slot is within the window by construction
+            o = decode_attention(q, kc, vc, jnp.minimum(cache_len, smax))
+        else:
+            o = decode_attention(q, kc, vc, cache_len, window=window)
+    else:
+        if cache is not None and not ring and cache_index is not None:
+            # (chunked) prefill: write the chunk into the cache at its
+            # absolute offset, attend against everything cached so far —
+            # causal masking by absolute position handles both the first
+            # chunk and continuations (cache_index may be traced)
+            kc = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k, cache_index, axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v, cache_index, axis=2)
+            kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
+            new_cache = {"k": kc, "v": vc}
+            o = attention(q, kc, vc, causal=causal, window=window,
+                          q_offset=cache_index, impl=cfg.attn_impl,
+                          block_k=cfg.attn_block_k,
+                          use_pallas=cfg.use_pallas)
+        else:
+            o = attention(q, k, v, causal=causal, window=window,
+                          impl=cfg.attn_impl, block_k=cfg.attn_block_k,
+                          use_pallas=cfg.use_pallas)
+            if cache is not None:
+                if ring and s > smax:
+                    # prefill longer than the ring: keep the last `smax`
+                    # tokens, rotated so token t sits at slot t % smax
+                    shift = (s - smax) % smax
+                    kw = jnp.roll(k[:, :, -smax:], shift, axis=2)
+                    vw = jnp.roll(v[:, :, -smax:], shift, axis=2)
+                    new_cache = {"k": constrain(kw, "cache"),
+                                 "v": constrain(vw, "cache")}
+                else:
+                    kc = jax.lax.dynamic_update_slice_in_dim(
+                        cache["k"], k, 0, axis=2)
+                    vc = jax.lax.dynamic_update_slice_in_dim(
+                        cache["v"], v, 0, axis=2)
+                    new_cache = {"k": constrain(kc, "cache"),
+                                 "v": constrain(vc, "cache")}
+    o = constrain(o, "bhsd")
+    with jax.named_scope("attn_out"):
+        o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
+        y = unified_linear(o, params["wo"], use_pallas=cfg.use_pallas)
+    return constrain(y, "btd"), new_cache
+
+
+def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    hkv, hd = cfg.num_kv_heads, cfg.hd
+    shape = (batch, hkv, max_len, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+# ---------------------------------------------------------------- embeddings
+
+
+def init_embed(key, cfg: ArchConfig, dtype):
+    p = {}
+    if cfg.embed_input == "tokens":
+        p["tokens"] = (jax.random.normal(key, (cfg.vocab_size, cfg.d_model))
+                       * 0.02).astype(dtype)
+    return p
+
+
+@jax.named_scope("embed")
+def embed_inputs(params, inputs, cfg: ArchConfig):
+    """tokens (B, S) int32 → (B, S, d); embeddings pass through (stub
+    frontend for [audio]/[vlm] archs)."""
+    if cfg.embed_input == "tokens":
+        x = jnp.take(params["tokens"], inputs, axis=0)
+    else:
+        x = inputs.astype(cfg.activation_dtype)
+    return constrain(x, "btd")
+
+
+def init_lm_head(key, cfg: ArchConfig, dtype):
+    if cfg.tie_embeddings or cfg.vocab_size == 0:
+        return {}
+    s = 1.0 / math.sqrt(cfg.d_model)
+    return {"w": (jax.random.normal(key, (cfg.d_model, cfg.vocab_size)) * s
+                  ).astype(dtype)}
+
+
+@jax.named_scope("lm_head")
+def apply_lm_head(head_params, embed_params, x, cfg: ArchConfig):
+    if cfg.vocab_size == 0:
+        return x  # feature trunk (M3ViT) — task heads applied by the caller
+    if cfg.tie_embeddings:
+        w = embed_params["tokens"].T
+        logits = jnp.matmul(x, w, preferred_element_type=jnp.float32)
+    else:
+        logits = unified_linear(x, head_params["w"], use_pallas=cfg.use_pallas,
+                                preferred_dtype=jnp.float32)
+    return constrain(logits.astype(jnp.float32), "btv")

@@ -1,0 +1,83 @@
+"""Model facade: init / forward / loss / input_specs for every architecture.
+
+``input_specs(cfg, shape)`` returns jax.ShapeDtypeStruct stand-ins for every
+model input of a (arch × shape) cell — weak-type-correct, shardable, no device
+allocation — consumed by the multi-pod dry-run (.lower on abstract values).
+For [audio]/[vlm] archs the modality frontend is a stub: inputs are
+precomputed frame/patch embeddings (B, S, d) rather than token ids.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, Shape
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "lm_loss", "input_specs", "init_state"]
+
+init_params = T.init_params
+forward = T.forward
+init_state = T.init_state
+
+
+def lm_loss(params, batch, cfg: ArchConfig, aux_weight: float = 0.01,
+            task_id=0):
+    """Cross-entropy next-token loss.  batch: {"inputs", "labels"}.
+
+    inputs: (B,S) int32 tokens or (B,S,d) embeddings (stub frontends);
+    labels: (B,S) int32 (label -100 = masked).
+
+    Written vocab-shard-friendly: the label logit is extracted with an
+    iota-mask reduction instead of ``take_along_axis`` — a gather over the
+    model-sharded vocab dim would force GSPMD to all-gather the full logits
+    (O(B·S·V) collective); the mask-reduce keeps everything local followed
+    by a tiny (B, S) cross-shard reduce.  Numerically identical to
+    log_softmax + gather (tests assert so).
+    """
+    logits, _, aux = T.forward(params, batch["inputs"], cfg, task_id=task_id)
+    labels = batch["labels"]
+    ns = jax.named_scope("loss")
+    ns.__enter__()
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1))
+    v = lf.shape[-1]
+    safe = jnp.maximum(labels, 0)
+    onehot = (jax.lax.broadcasted_iota(jnp.int32, lf.shape, lf.ndim - 1)
+              == safe[..., None])
+    label_logit = jnp.sum(jnp.where(onehot, shifted, 0.0), axis=-1)
+    nll = lse - label_logit
+    mask = labels >= 0
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    ns.__exit__(None, None, None)
+    return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+
+def input_specs(cfg: ArchConfig, shape: Shape, dtype=None) -> dict[str, Any]:
+    """ShapeDtypeStructs for the cell's step function inputs."""
+    dtype = dtype or cfg.activation_dtype
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        if cfg.embed_input == "tokens":
+            inputs = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        else:
+            inputs = jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)
+        return {"inputs": inputs,
+                "labels": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if shape.kind == "prefill":
+        if cfg.embed_input == "tokens":
+            return {"inputs": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+        return {"inputs": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+    # decode: one new token against a state/cache of length seq_len
+    if cfg.embed_input == "tokens":
+        tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    else:
+        tok = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dtype)
+    state = jax.eval_shape(lambda: T.init_state(cfg, b, s, dtype))
+    return {"inputs": tok, "state": state,
+            "cache_index": jax.ShapeDtypeStruct((), jnp.int32)}

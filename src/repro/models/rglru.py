@@ -1,0 +1,130 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).  [arXiv:2402.19427]
+
+Real-Gated Linear Recurrent Unit, per channel:
+
+    r_t = sigmoid(block_diag_linear_r(x_t))          # recurrence gate
+    i_t = sigmoid(block_diag_linear_i(x_t))          # input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)           # c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Linear recurrence ⇒ training/prefill use ``jax.lax.associative_scan`` over the
+sequence (log-depth), decode is O(1)/token — which is what makes the
+``long_500k`` cell runnable for this family.  Gate projections are
+block-diagonal with ``num_heads`` blocks, as in the public RecurrentGemma
+implementation.
+
+Block structure (the Griffin "recurrent block"):
+    x -> W_x -> causal conv1d(4) -> RG-LRU ┐
+    x -> W_y -> GeLU ──────────────────────┴─ elementwise * -> W_down
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.gelu import get_activation
+from repro.core.unified_linear import unified_linear
+from repro.dist.sharding import constrain
+from repro.models.xlstm import causal_conv1d
+
+C_SCALE = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    w = cfg.lru_width or d
+    h = cfg.num_heads
+    bw = w // h
+    ks = jax.random.split(key, 6)
+    s = 1.0 / math.sqrt(d)
+    sb = 1.0 / math.sqrt(bw)
+    # Lambda init so that a = exp(-c*softplus(L)) is spread in (0.9, 0.999)
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / C_SCALE))
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, w)) * s).astype(dtype),      # x branch
+        "w_up2": (jax.random.normal(ks[1], (d, w)) * s).astype(dtype),     # y branch
+        "conv": (jax.random.normal(ks[2], (cfg.conv_width, w)) * 0.1).astype(jnp.float32),
+        "gates": (jax.random.normal(ks[3], (h, bw, 2 * bw)) * sb).astype(jnp.float32),
+        "lam": lam.astype(jnp.float32),
+        "w_down": (jax.random.normal(ks[5], (w, d)) * (1.0 / math.sqrt(w))).astype(dtype),
+    }
+
+
+def _rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: (B, S, W) f32.  Linear recurrence via associative scan."""
+    log_a = -C_SCALE * jax.nn.softplus(lam) * r          # (B,S,W), <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) with a = exp(log_a): use expm1 for precision near a ~ 1
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    u = beta * (i * x)
+    if h0 is not None:
+        # fold the carried state in as a virtual step 0: h_0 given, a_0 = 1
+        a = jnp.concatenate([jnp.ones_like(a[:, :1]), a], axis=1)
+        u = jnp.concatenate([h0[:, None, :], u], axis=1)
+
+    def combine(p, q):
+        a1, b1 = p
+        a2, b2 = q
+        return a1 * a2, a2 * b1 + b2
+
+    A, H = jax.lax.associative_scan(combine, (a, u), axis=1)
+    if h0 is not None:
+        H = H[:, 1:]
+    return H
+
+
+def rglru_step(x, r, i, lam, h_prev):
+    """One decode step: x,r,i (B,W); h_prev (B,W)."""
+    log_a = -C_SCALE * jax.nn.softplus(lam) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    return a * h_prev + beta * (i * x)
+
+
+@jax.named_scope("rglru")
+def apply_rglru(params, x, cfg: ArchConfig, state=None, decode=False):
+    """x: (B,S,d) -> (y, state).  state: {"h": (B,W), "conv": (B,cw-1,W)}."""
+    b, s, d = x.shape
+    w = cfg.lru_width or d
+    h = cfg.num_heads
+    bw = w // h
+
+    xb = unified_linear(x, params["w_up"], use_pallas=cfg.use_pallas)
+    yb = unified_linear(x, params["w_up2"], activation="gelu",
+                        use_lut=cfg.use_lut_activation, use_pallas=cfg.use_pallas)
+    xb = constrain(xb, "btw")
+    conv_state = state["conv"] if state is not None else None
+    xc, conv_state = causal_conv1d(xb, params["conv"], conv_state)
+    xc32 = xc.astype(jnp.float32)
+    # block-diagonal gate projections (num_heads blocks)
+    xg = xc32.reshape(b, s, h, bw)
+    gates = jnp.einsum("bshi,hig->bshg", xg, params["gates"])
+    r, i = jnp.split(jax.nn.sigmoid(gates), 2, axis=-1)
+    r = r.reshape(b, s, w)
+    i = i.reshape(b, s, w)
+
+    h_prev = state["h"] if state is not None else None
+    if decode and s == 1:
+        h_prev = h_prev if h_prev is not None else jnp.zeros((b, w), jnp.float32)
+        hn = rglru_step(xc32[:, 0], r[:, 0], i[:, 0], params["lam"], h_prev)
+        hseq = hn[:, None]
+        h_new = hn
+    else:
+        hseq = _rglru_scan(xc32, r, i, params["lam"], h_prev)
+        h_new = hseq[:, -1]
+    out = (hseq.astype(x.dtype) * yb)
+    y = unified_linear(out, params["w_down"], use_pallas=cfg.use_pallas)
+    return constrain(y, "btd"), {"h": h_new, "conv": conv_state}
+
+
+def init_rglru_state(cfg: ArchConfig, batch: int):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), cfg.activation_dtype),
+    }

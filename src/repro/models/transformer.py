@@ -1,0 +1,274 @@
+"""Generic decoder model: assembles dense / MoE / recurrent blocks per config.
+
+Layers are grouped into *periods* (one cycle of ``cfg.block_pattern``) and the
+periods are ``jax.lax.scan``ned — one traced copy of the period regardless of
+depth (95-layer deepseek compiles as fast as 16-layer llama).  Params and
+decode states are stacked with a leading ``n_periods`` dim; a remainder of
+``num_layers % period`` layers is applied unrolled.
+
+The same ``forward`` serves all three shape kinds:
+  * train/prefill: full sequence, causal attention, states returned (prefill
+    fills KV caches / recurrent states);
+  * decode: S = 1 with ``decode=True`` and a ``cache_index``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import moe as moe_lib
+from repro.dist.sharding import constrain
+from repro.models import layers as L
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+
+__all__ = ["init_params", "forward", "init_state", "moe_config"]
+
+
+def moe_config(cfg: ArchConfig) -> moe_lib.MoEConfig:
+    spec = cfg.moe
+    return moe_lib.MoEConfig(
+        d_model=cfg.d_model,
+        d_ff=spec.d_ff,
+        num_experts=spec.num_experts,
+        top_k=spec.top_k,
+        num_tasks=max(spec.num_tasks, cfg.num_tasks),
+        expert_kind="swiglu" if cfg.mlp_kind in ("swiglu",) else "gelu",
+        num_shared_experts=spec.num_shared_experts,
+        capacity_factor=spec.capacity_factor,
+        group_size=spec.group_size,
+        impl=spec.impl,
+        renormalize=spec.renormalize,
+        use_lut=cfg.use_lut_activation,
+        use_pallas=cfg.use_pallas,
+    )
+
+
+# ------------------------------------------------------------ block init
+
+
+def _init_block(key, kind: str, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 4)
+    if kind in ("attn_mlp", "attn_local_mlp"):
+        return {
+            "ln1": L.init_norm(cfg),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_norm(cfg),
+            "mlp": L.init_mlp(ks[1], cfg, dtype),
+        }
+    if kind == "attn_moe":
+        return {
+            "ln1": L.init_norm(cfg),
+            "attn": L.init_attention(ks[0], cfg, dtype),
+            "ln2": L.init_norm(cfg),
+            "moe": moe_lib.init_moe(ks[1], moe_config(cfg), dtype),
+        }
+    if kind == "mlstm":
+        return {"ln": L.init_norm(cfg), "mlstm": XL.init_mlstm(ks[0], cfg, dtype)}
+    if kind == "slstm":
+        return {"ln": L.init_norm(cfg), "slstm": XL.init_slstm(ks[0], cfg, dtype)}
+    if kind == "rglru_mlp":
+        return {
+            "ln1": L.init_norm(cfg),
+            "rglru": RG.init_rglru(ks[0], cfg, dtype),
+            "ln2": L.init_norm(cfg),
+            "mlp": L.init_mlp(ks[1], cfg, dtype),
+        }
+    raise ValueError(f"unknown block kind {kind}")
+
+
+def _init_block_state(kind: str, cfg: ArchConfig, batch: int, max_len: int, dtype):
+    if kind in ("attn_mlp", "attn_moe"):
+        return L.init_attn_cache(cfg, batch, max_len, dtype)
+    if kind == "attn_local_mlp":
+        # ring-buffer cache: windowed attention only ever reads the last
+        # `window` positions, so the cache is a ring of `window` slots
+        # (token t at slot t % window) — 256× smaller for long_500k
+        # (EXPERIMENTS.md §Perf beyond-paper deltas)
+        eff = min(max_len, (cfg.window or max_len))
+        return L.init_attn_cache(cfg, batch, eff, dtype)
+    if kind == "mlstm":
+        return XL.init_mlstm_state(cfg, batch)
+    if kind == "slstm":
+        return XL.init_slstm_state(cfg, batch)
+    if kind == "rglru_mlp":
+        return RG.init_rglru_state(cfg, batch)
+    raise ValueError(kind)
+
+
+def _apply_block(kind: str, params, x, cfg: ArchConfig, *, pos, state,
+                 cache_index, decode, task_id):
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("attn_mlp", "attn_moe", "attn_local_mlp"):
+        window = cfg.window if kind == "attn_local_mlp" else None
+        h = L.apply_norm(params["ln1"], x, cfg)
+        a, new_cache = L.apply_attention(
+            params["attn"], h, cfg, pos=pos, causal=cfg.family != "vit-moe",
+            window=window, cache=state, cache_index=cache_index)
+        x = constrain(x + a, "btd")
+        h = L.apply_norm(params["ln2"], x, cfg)
+        if kind == "attn_moe":
+            y, aux = moe_lib.apply_moe(params["moe"], moe_config(cfg), h,
+                                       task_id=task_id)
+        else:
+            y = L.apply_mlp(params["mlp"], h, cfg)
+        return constrain(x + y, "btd"), new_cache, aux
+    if kind == "mlstm":
+        h = L.apply_norm(params["ln"], x, cfg)
+        y, new_state = XL.apply_mlstm(params["mlstm"], h, cfg, state, decode)
+        return constrain(x + y, "btd"), new_state, aux
+    if kind == "slstm":
+        h = L.apply_norm(params["ln"], x, cfg)
+        y, new_state = XL.apply_slstm(params["slstm"], h, cfg, state, decode)
+        return constrain(x + y, "btd"), new_state, aux
+    if kind == "rglru_mlp":
+        h = L.apply_norm(params["ln1"], x, cfg)
+        y, new_state = RG.apply_rglru(params["rglru"], h, cfg, state, decode)
+        x = constrain(x + y, "btd")
+        h = L.apply_norm(params["ln2"], x, cfg)
+        y = L.apply_mlp(params["mlp"], h, cfg)
+        return constrain(x + y, "btd"), new_state, aux
+    raise ValueError(kind)
+
+
+# ------------------------------------------------------------ model init
+
+
+def init_params(key, cfg: ArchConfig, dtype=None):
+    dtype = dtype or cfg.activation_dtype
+    n_scan = cfg.num_layers // cfg.period
+    n_rest = cfg.num_layers % cfg.period
+    k_embed, k_head, k_layers, k_rest = jax.random.split(key, 4)
+
+    def init_period(k):
+        ks = jax.random.split(k, cfg.period)
+        return {f"b{i}": _init_block(ks[i], cfg.block_pattern[i], cfg, dtype)
+                for i in range(cfg.period)}
+
+    layer_keys = jax.random.split(k_layers, n_scan)
+    scanned = jax.vmap(init_period)(layer_keys) if n_scan else None
+    rest_keys = jax.random.split(k_rest, max(n_rest, 1))
+    rest = [
+        _init_block(rest_keys[i], cfg.block_pattern[i % cfg.period], cfg, dtype)
+        for i in range(n_rest)
+    ]
+    params = {
+        "embed": L.init_embed(k_embed, cfg, dtype),
+        "final_norm": L.init_norm(cfg),
+        "head": L.init_lm_head(k_head, cfg, dtype),
+    }
+    if scanned is not None:
+        params["layers"] = scanned
+    if rest:
+        params["rest"] = rest
+    return params
+
+
+def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
+    """Decode/prefill state: stacked for the scanned periods + list for rest."""
+    dtype = dtype or cfg.activation_dtype
+    n_scan = cfg.num_layers // cfg.period
+    n_rest = cfg.num_layers % cfg.period
+
+    def one_period():
+        return {f"b{i}": _init_block_state(cfg.block_pattern[i], cfg, batch,
+                                           max_len, dtype)
+                for i in range(cfg.period)}
+
+    state = {}
+    if n_scan:
+        proto = one_period()
+        state["layers"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (n_scan,) + a.shape).copy(), proto)
+    if n_rest:
+        state["rest"] = [
+            _init_block_state(cfg.block_pattern[i % cfg.period], cfg, batch,
+                              max_len, dtype)
+            for i in range(n_rest)
+        ]
+    return state
+
+
+# ------------------------------------------------------------ forward
+
+
+def forward(params, inputs, cfg: ArchConfig, *, pos=None, state=None,
+            cache_index=None, decode=False, task_id=0, return_state=None,
+            logits_mode: str = "all"):
+    """inputs: tokens (B,S) int32 or embeddings (B,S,d).
+
+    Returns (logits, new_state, aux_loss).  ``new_state`` is None unless a
+    state was passed (prefill/decode) or ``return_state`` forces it.
+    ``logits_mode="last"`` applies the LM head to the final position only
+    (prefill: avoids materializing (B, S, V) logits nobody reads).
+    """
+    x = L.embed_inputs(params["embed"], inputs, cfg)
+    b, s = x.shape[0], x.shape[1]
+    if pos is None:
+        offset = cache_index if cache_index is not None else 0
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+        pos = jnp.broadcast_to(pos, (b, s))
+    x = L.position_encode(x, cfg, offset=0 if cache_index is None else cache_index)
+
+    want_state = state is not None if return_state is None else return_state
+    n_scan = cfg.num_layers // cfg.period
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def super_block(x, period_params, period_state):
+        aux_sum = jnp.zeros((), jnp.float32)
+        new_states = {}
+        for i in range(cfg.period):
+            kind = cfg.block_pattern[i]
+            st = period_state.get(f"b{i}") if period_state else None
+            x, new_st, aux = _apply_block(
+                kind, period_params[f"b{i}"], x, cfg, pos=pos, state=st,
+                cache_index=cache_index, decode=decode, task_id=task_id)
+            if want_state:
+                new_states[f"b{i}"] = new_st
+            aux_sum = aux_sum + aux
+        return x, new_states, aux_sum
+
+    if cfg.remat:
+        super_block = jax.checkpoint(super_block)
+
+    new_state = {}
+    if n_scan:
+        if want_state and state is not None:
+            def body(carry, xs):
+                x, aux = carry
+                pparams, pstate = xs
+                x, nstate, a = super_block(x, pparams, pstate)
+                return (x, aux + a), nstate
+
+            (x, aux_total), scanned_states = jax.lax.scan(
+                body, (x, aux_total), (params["layers"], state["layers"]))
+            new_state["layers"] = scanned_states
+        else:
+            def body(carry, pparams):
+                x, aux = carry
+                x, _, a = super_block(x, pparams, None)
+                return (x, aux + a), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
+                                             params["layers"])
+
+    for i, bparams in enumerate(params.get("rest", [])):
+        kind = cfg.block_pattern[i % cfg.period]
+        st = state["rest"][i] if (state is not None and "rest" in state) else None
+        x, nst, a = _apply_block(kind, bparams, x, cfg, pos=pos, state=st,
+                                 cache_index=cache_index, decode=decode,
+                                 task_id=task_id)
+        if want_state:
+            new_state.setdefault("rest", []).append(nst)
+        aux_total = aux_total + a
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    if logits_mode == "last":
+        x = x[:, -1:]
+    logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
+    return logits, (new_state if want_state else None), aux_total

@@ -1,0 +1,99 @@
+"""M³ViT — the paper's multi-task mixture-of-experts ViT (Fig. 3 left).
+
+Patch embedding → 12 transformer blocks alternating dense ViT blocks (even)
+and MoE blocks (odd, 16 experts top-4, per-task gating) → task-specific dense
+prediction heads (semantic segmentation + depth estimation, Cityscapes
+128×256, patch 16 → 128 tokens).
+
+Task switching is the paper's §IV-F mechanism: the gate table carries a task
+axis, switching is a dynamic index — zero weight movement.  The trunk reuses
+the generic transformer (non-causal for the vit-moe family).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import m3vit as M
+from repro.configs.base import ArchConfig
+from repro.core.unified_linear import unified_linear
+from repro.models import transformer as T
+
+__all__ = ["init_params", "forward", "multitask_loss", "patchify"]
+
+
+def patchify(images):
+    """(B, H, W, C) -> (B, nH*nW, P*P*C)."""
+    b, h, w, c = images.shape
+    p = M.PATCH
+    x = images.reshape(b, h // p, p, w // p, p, c)
+    x = x.transpose(0, 1, 3, 2, 4, 5)
+    return x.reshape(b, (h // p) * (w // p), p * p * c)
+
+
+def init_params(key, cfg: ArchConfig, dtype=None, num_seg_classes=M.NUM_SEG_CLASSES):
+    dtype = dtype or cfg.activation_dtype
+    k_trunk, k_patch, k_pos, k_seg, k_dep = jax.random.split(key, 5)
+    d, p = cfg.d_model, M.PATCH
+    params = T.init_params(k_trunk, cfg, dtype)
+    s = 1.0 / math.sqrt(p * p * 3)
+    params["patch"] = {
+        "w": (jax.random.normal(k_patch, (p * p * 3, d)) * s).astype(dtype),
+        "b": jnp.zeros((d,), jnp.float32),
+        "pos": (jax.random.normal(k_pos, (M.NUM_PATCHES, d)) * 0.02).astype(dtype),
+    }
+    sh = 1.0 / math.sqrt(d)
+    params["heads"] = {
+        "semseg": {"w": (jax.random.normal(k_seg, (d, p * p * num_seg_classes)) * sh
+                         ).astype(dtype),
+                   "b": jnp.zeros((p * p * num_seg_classes,), jnp.float32)},
+        "depth": {"w": (jax.random.normal(k_dep, (d, p * p)) * sh).astype(dtype),
+                  "b": jnp.zeros((p * p,), jnp.float32)},
+    }
+    return params
+
+
+def forward(params, images, cfg: ArchConfig, task: str = "semseg",
+            num_seg_classes=M.NUM_SEG_CLASSES):
+    """images: (B, H, W, 3) f32 or precomputed patch embeddings (B, T, d).
+
+    Returns (prediction, aux_loss).  semseg: (B, H, W, classes) logits;
+    depth: (B, H, W).
+    """
+    task_id = M.TASKS.index(task)
+    if images.ndim == 4:
+        tokens = patchify(images).astype(cfg.activation_dtype)
+        x = unified_linear(tokens, params["patch"]["w"], params["patch"]["b"])
+        x = x + params["patch"]["pos"]
+    else:
+        x = images.astype(cfg.activation_dtype)
+    feats, _, aux = T.forward(params, x, cfg, task_id=task_id)
+    b, t, d = feats.shape
+    p = M.PATCH
+    nh, nw = M.IMAGE_H // p, M.IMAGE_W // p
+    hp = params["heads"][task]
+    y = unified_linear(feats, hp["w"], hp["b"], preferred_dtype=jnp.float32)
+    if task == "semseg":
+        y = y.reshape(b, nh, nw, p, p, num_seg_classes)
+        y = y.transpose(0, 1, 3, 2, 4, 5).reshape(b, M.IMAGE_H, M.IMAGE_W,
+                                                  num_seg_classes)
+    else:
+        y = y.reshape(b, nh, nw, p, p).transpose(0, 1, 3, 2, 4).reshape(
+            b, M.IMAGE_H, M.IMAGE_W)
+    return y.astype(jnp.float32), aux
+
+
+def multitask_loss(params, images, labels, cfg: ArchConfig, task: str,
+                   aux_weight: float = 0.01):
+    """labels: semseg (B,H,W) int32 or depth (B,H,W) f32."""
+    pred, aux = forward(params, images, cfg, task=task)
+    if task == "semseg":
+        logp = jax.nn.log_softmax(pred, axis=-1)
+        nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = nll.mean()
+    else:
+        loss = jnp.sqrt(jnp.mean((pred - labels) ** 2) + 1e-8)  # RMSE (paper)
+    return loss + aux_weight * aux, (loss, aux)

@@ -1,0 +1,315 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM (scalar,
+strictly recurrent).  [arXiv:2405.04517]
+
+mLSTM recurrence per head (state C in R^{dh x dh}, n in R^dh, stabilizer m):
+
+    m_t = max(logf_t + m_{t-1}, logi_t)                  # running-max rescale
+    C_t = exp(logf_t + m_{t-1} - m_t) C_{t-1} + exp(logi_t - m_t) v_t k_t^T
+    n_t = exp(logf_t + m_{t-1} - m_t) n_{t-1} + exp(logi_t - m_t) k_t
+    h_t = (C_t q_t) / max(|n_t . q_t|, exp(-m_t))
+
+The stabilizer is the same running-max rescaling as the paper's single-pass
+softmax (Edge-MoE Alg. 1) — noted in DESIGN.md as the technique-② analogue for
+this attention-free family.  Training/prefill use the **chunkwise** form
+(intra-chunk quadratic + carried inter-chunk state), mathematically equal to
+the recurrence (tests assert allclose vs the naive scan); decode is O(1)/token.
+
+Parameter layout per block (paths drive sharding rules in dist/sharding.py):
+  mlstm/w_up, w_gates(z): d -> di (pf=2), w_qkv: di -> 3*di, conv (cw, di),
+  w_if: di -> 2H (scalar gates per head), gn scale, w_down: di -> d.
+  slstm/w_gates: d -> 4d, r_gates: per-head recurrent (H, dh, 4*dh),
+  gn scale, w_up (d -> pf*d, pf=4/3 gated), w_up2, w_down.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core.unified_linear import unified_linear
+from repro.dist.sharding import constrain
+
+# ------------------------------------------------------------ helpers
+
+
+def group_norm(x, scale, eps=1e-6):
+    """Per-head layernorm (no bias): x (..., H, dh), scale (H, dh)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+def causal_conv1d(x, w, state=None):
+    """Depthwise causal conv: x (B,S,D), w (cw, D), state (B, cw-1, D) or None.
+
+    Returns (y, new_state) where new_state holds the trailing cw-1 inputs.
+    """
+    cw = w.shape[0]
+    b, s, d = x.shape
+    if state is None:
+        state = jnp.zeros((b, cw - 1, d), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(cw):
+        y = y + xp[:, i : i + s] * w[i]
+    new_state = xp[:, -(cw - 1):] if cw > 1 else state
+    return y.astype(x.dtype), new_state
+
+
+# ------------------------------------------------------------ mLSTM
+
+
+def init_mlstm(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    di = 2 * d  # pf = 2
+    ks = jax.random.split(key, 6)
+    s, si = 1.0 / math.sqrt(d), 1.0 / math.sqrt(di)
+    return {
+        "w_up": (jax.random.normal(ks[0], (d, di)) * s).astype(dtype),
+        "w_gates": (jax.random.normal(ks[1], (d, di)) * s).astype(dtype),  # z branch
+        "w_qkv": (jax.random.normal(ks[2], (di, 3 * di)) * si).astype(dtype),
+        "conv": (jax.random.normal(ks[3], (cfg.conv_width, di)) * 0.1).astype(jnp.float32),
+        "w_if": (jax.random.normal(ks[4], (di, 2 * h)) * si).astype(jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((h,)), jnp.full((h,), 3.0)]),  # forget bias
+        "gn_scale": jnp.ones((h, di // h), jnp.float32),
+        "w_down": (jax.random.normal(ks[5], (di, d)) * si).astype(dtype),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, logi, logf, state, chunk: int):
+    """Chunkwise mLSTM.  q,k,v: (B,H,S,dh); logi/logf: (B,H,S) f32.
+
+    state: (C (B,H,dh,dh), n (B,H,dh), m (B,H)) or None.
+    Returns (h (B,H,S,dh), new_state).
+    """
+    b, h, s, dh = q.shape
+    nchunk = -(-s // chunk)
+    pad = nchunk * chunk - s
+    if pad:
+        zpad = lambda a, val=0.0: jnp.pad(a, [(0, 0), (0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 3),
+                                          constant_values=val)
+        q, k, v = (jnp.pad(a, [(0, 0), (0, 0), (0, pad), (0, 0)]) for a in (q, k, v))
+        logi = zpad(logi, -1e30)  # padded steps contribute exp(-inf)=0
+        logf = zpad(logf, 0.0)    # and do not decay the carried state
+    qc = q.reshape(b, h, nchunk, chunk, dh)
+    kc = k.reshape(b, h, nchunk, chunk, dh) / math.sqrt(dh)
+    vc = v.reshape(b, h, nchunk, chunk, dh)
+    lic = logi.reshape(b, h, nchunk, chunk)
+    lfc = logf.reshape(b, h, nchunk, chunk)
+
+    if state is None:
+        C0 = jnp.zeros((b, h, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, h, dh), jnp.float32)
+        m0 = jnp.full((b, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state
+
+    def body(carry, blk):
+        C, n, m = carry
+        qb, kb, vb, li, lf = blk  # (B,H,L,*)
+        L = qb.shape[2]
+        bcum = jnp.cumsum(lf, axis=-1)                      # b_i = sum_{s<=i} logf_s
+        # stabilizer: m_i = b_i + max(m_prev, running_max_j<=i (li_j - b_j))
+        g = li - bcum                                        # (B,H,L)
+        run = jax.lax.associative_scan(jnp.maximum, g, axis=-1)
+        m_i = bcum + jnp.maximum(m[..., None], run)          # (B,H,L)
+        # intra-chunk decay matrix: log w_ij = b_i - b_j + li_j  (j <= i)
+        logw = bcum[..., :, None] - bcum[..., None, :] + li[..., None, :]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        logw = jnp.where(tri, logw - m_i[..., :, None], -1e30)
+        w = jnp.exp(logw)                                    # (B,H,L,L)
+        sc = jnp.einsum("bhid,bhjd->bhij", qb.astype(jnp.float32),
+                        kb.astype(jnp.float32)) * w
+        num_intra = jnp.einsum("bhij,bhjd->bhid", sc, vb.astype(jnp.float32))
+        den_intra = sc.sum(-1)
+        # inter-chunk: carried state at scale m_prev
+        inter_scale = jnp.exp(bcum + m[..., None] - m_i)     # (B,H,L)
+        num_inter = jnp.einsum("bhid,bhde->bhie", qb.astype(jnp.float32), C)
+        den_inter = jnp.einsum("bhid,bhd->bhi", qb.astype(jnp.float32), n)
+        num = num_intra + num_inter * inter_scale[..., None]
+        den = den_intra + den_inter * inter_scale
+        hout = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_i))[..., None]
+        # state update to end of chunk
+        m_L = m_i[..., -1]
+        carry_scale = jnp.exp(bcum[..., -1:] + m[..., None] - m_L[..., None])  # (B,H,1)
+        kv_scale = jnp.exp(bcum[..., -1:] - bcum + li - m_L[..., None])  # (B,H,L)
+        C_new = C * carry_scale[..., None] + jnp.einsum(
+            "bhj,bhjd,bhje->bhde", kv_scale, kb.astype(jnp.float32),
+            vb.astype(jnp.float32))
+        n_new = n * carry_scale + jnp.einsum(
+            "bhj,bhjd->bhd", kv_scale, kb.astype(jnp.float32))
+        return (C_new, n_new, m_L), hout
+
+    blks = tuple(jnp.moveaxis(a, 2, 0) for a in (qc, kc, vc, lic, lfc))
+    (C, n, m), hs = jax.lax.scan(body, (C0, n0, m0), blks)
+    hseq = jnp.moveaxis(hs, 0, 2).reshape(b, h, nchunk * chunk, dh)
+    if pad:
+        hseq = hseq[:, :, :s]
+    return hseq.astype(q.dtype), (C, n, m)
+
+
+def mlstm_recurrent_step(q, k, v, logi, logf, state):
+    """Single-token recurrence (decode oracle + serve path).
+
+    q,k,v: (B,H,dh); logi/logf: (B,H).  state as in _mlstm_chunk_scan.
+    """
+    C, n, m = state
+    dh = q.shape[-1]
+    k = k.astype(jnp.float32) / math.sqrt(dh)
+    v = v.astype(jnp.float32)
+    q = q.astype(jnp.float32)
+    m_new = jnp.maximum(logf + m, logi)
+    fscale = jnp.exp(logf + m - m_new)
+    iscale = jnp.exp(logi - m_new)
+    C = C * fscale[..., None, None] + iscale[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = n * fscale[..., None] + iscale[..., None] * k
+    num = jnp.einsum("bhd,bhde->bhe", q, C)
+    den = jnp.einsum("bhd,bhd->bh", q, n)
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_new))[..., None]
+    return h.astype(jnp.float32), (C, n, m_new)
+
+
+@jax.named_scope("mlstm")
+def apply_mlstm(params, x, cfg: ArchConfig, state=None, decode=False):
+    """x: (B,S,d).  state: {"C","n","m","conv"} or None.  Returns (y, state)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    di = 2 * d
+    dh = di // h
+    u = unified_linear(x, params["w_up"], use_pallas=cfg.use_pallas)
+    z = unified_linear(x, params["w_gates"], use_pallas=cfg.use_pallas)
+    u = constrain(u, "btw")
+    conv_state = state["conv"] if state is not None else None
+    uc, conv_state = causal_conv1d(u, params["conv"], conv_state)
+    uc = jax.nn.silu(uc.astype(jnp.float32)).astype(u.dtype)
+    qkv = unified_linear(uc, params["w_qkv"], use_pallas=cfg.use_pallas)
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    gates = jnp.einsum("bsd,dg->bsg", uc.astype(jnp.float32), params["w_if"]) + params["b_if"]
+    logi, logf_raw = jnp.split(gates, 2, axis=-1)            # (B,S,H)
+    logf = jax.nn.log_sigmoid(logf_raw)
+
+    def heads(t):  # (B,S,di) -> (B,H,S,dh)
+        return t.reshape(b, s, h, dh).transpose(0, 2, 1, 3)
+
+    q, k, v = heads(q), heads(k), heads(v)
+    logi_t = logi.transpose(0, 2, 1)
+    logf_t = logf.transpose(0, 2, 1)
+
+    inner = (state["C"], state["n"], state["m"]) if state is not None else None
+    if decode and s == 1:
+        hout, inner = mlstm_recurrent_step(
+            q[:, :, 0], k[:, :, 0], v[:, :, 0],
+            logi_t[:, :, 0], logf_t[:, :, 0], inner)
+        hout = hout[:, :, None, :]
+    else:
+        hout, inner = _mlstm_chunk_scan(q, k, v, logi_t, logf_t, inner,
+                                        cfg.mlstm_chunk)
+    hn = group_norm(hout.transpose(0, 2, 1, 3), params["gn_scale"])  # (B,S,H,dh)
+    hn = hn.reshape(b, s, di)
+    gated = (hn * jax.nn.silu(z.astype(jnp.float32)).astype(hn.dtype))
+    y = unified_linear(gated.astype(x.dtype), params["w_down"],
+                       use_pallas=cfg.use_pallas)
+    new_state = {"C": inner[0], "n": inner[1], "m": inner[2], "conv": conv_state}
+    return constrain(y, "btd"), new_state
+
+
+def init_mlstm_state(cfg: ArchConfig, batch: int):
+    h = cfg.num_heads
+    di = 2 * cfg.d_model
+    dh = di // h
+    return {
+        "C": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, di), cfg.activation_dtype),
+    }
+
+
+# ------------------------------------------------------------ sLSTM
+
+
+def init_slstm(key, cfg: ArchConfig, dtype):
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    dup = (4 * d) // 3
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_gates": (jax.random.normal(ks[0], (d, 4 * d)) * s).astype(dtype),
+        "b_gates": jnp.concatenate(
+            [jnp.zeros((d,)), jnp.full((d,), 3.0), jnp.zeros((2 * d,))]),
+        "r_gates": (jax.random.normal(ks[1], (h, dh, 4 * dh)) * (1.0 / math.sqrt(dh))
+                    ).astype(jnp.float32),
+        "gn_scale": jnp.ones((h, dh), jnp.float32),
+        "w_up": (jax.random.normal(ks[2], (d, dup)) * s).astype(dtype),
+        "w_up2": (jax.random.normal(ks[3], (d, dup)) * s).astype(dtype),
+        "w_down": (jax.random.normal(ks[4], (dup, d)) * (1.0 / math.sqrt(dup))
+                   ).astype(dtype),
+    }
+
+
+def _slstm_cell(wx, r_gates, state):
+    """One step. wx: (B,H,dh,4) pre-computed W x_t + b; state (c,n,h,m)."""
+    c, n, hprev, m = state
+    rec = jnp.einsum("bhd,hdg->bhg", hprev, r_gates)
+    b_, h_, dh = hprev.shape
+    rec = rec.reshape(b_, h_, dh, 4)
+    z_, i_, f_, o_ = [ (wx + rec)[..., j] for j in range(4) ]
+    z = jnp.tanh(z_)
+    o = jax.nn.sigmoid(o_)
+    logf = jax.nn.log_sigmoid(f_)
+    m_new = jnp.maximum(logf + m, i_)
+    fscale = jnp.exp(logf + m - m_new)
+    iscale = jnp.exp(i_ - m_new)
+    c = fscale * c + iscale * z
+    n = fscale * n + iscale
+    hnew = o * c / jnp.maximum(n, 1e-6)
+    return (c, n, hnew, m_new), hnew
+
+
+@jax.named_scope("slstm")
+def apply_slstm(params, x, cfg: ArchConfig, state=None, decode=False):
+    """x: (B,S,d).  Strictly sequential scan (recurrent h feeds the gates)."""
+    b, s, d = x.shape
+    h = cfg.num_heads
+    dh = d // h
+    wx = jnp.einsum("bsd,dg->bsg", x.astype(jnp.float32), params["w_gates"]
+                    .astype(jnp.float32)) + params["b_gates"]
+    wx = wx.reshape(b, s, h, dh, 4)
+
+    if state is None:
+        zero = jnp.zeros((b, h, dh), jnp.float32)
+        inner = (zero, zero, zero, jnp.full((b, h, dh), -1e30, jnp.float32))
+    else:
+        inner = (state["c"], state["n"], state["h"], state["m"])
+
+    if decode and s == 1:
+        inner, hseq = _slstm_cell(wx[:, 0], params["r_gates"], inner)
+        hseq = hseq[:, None]
+    else:
+        def step(carry, wxt):
+            return _slstm_cell(wxt, params["r_gates"], carry)
+        inner, hs = jax.lax.scan(step, inner, jnp.moveaxis(wx, 1, 0))
+        hseq = jnp.moveaxis(hs, 0, 1)                        # (B,S,H,dh)
+
+    hn = group_norm(hseq, params["gn_scale"]).reshape(b, s, d).astype(x.dtype)
+    up = unified_linear(hn, params["w_up"], activation="gelu",
+                        use_lut=cfg.use_lut_activation, use_pallas=cfg.use_pallas)
+    up2 = unified_linear(hn, params["w_up2"], use_pallas=cfg.use_pallas)
+    y = unified_linear((up * up2).astype(x.dtype), params["w_down"],
+                       use_pallas=cfg.use_pallas)
+    new_state = {"c": inner[0], "n": inner[1], "h": inner[2], "m": inner[3]}
+    return constrain(y, "btd"), new_state
+
+
+def init_slstm_state(cfg: ArchConfig, batch: int):
+    h = cfg.num_heads
+    dh = cfg.d_model // h
+    zero = jnp.zeros((batch, h, dh), jnp.float32)
+    return {"c": zero, "n": zero, "h": zero,
+            "m": jnp.full((batch, h, dh), -1e30, jnp.float32)}

@@ -1,0 +1,133 @@
+"""AdamW optimizer (pure pytree implementation) with memory-scaling options.
+
+Built in-repo per scope rules (no optax dependency).  Features needed at
+pod scale:
+
+  * f32 or bf16 first moment (``momentum_dtype``) — halves optimizer HBM;
+  * **factored second moment** (Adafactor-style row/col statistics) for
+    matrices — O(n+m) instead of O(nm); the default for the trillion-param
+    kimi-k2 config where full Adam states cannot fit (DESIGN.md §5);
+  * global-norm gradient clipping;
+  * decoupled weight decay with parameter masking (no decay on norms/bias);
+  * cosine LR schedule with linear warmup.
+
+The update is shape-preserving over any parameter pytree, so it composes
+with GSPMD sharding: optimizer states inherit the parameter sharding.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OptConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm"]
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    momentum_dtype: str = "float32"     # "bfloat16" halves m-state memory
+    factored: bool = False              # Adafactor-style v for ndim>=2 params
+    factored_min_size: int = 128        # don't factor small matrices
+
+
+def cosine_schedule(cfg: OptConfig, step):
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    frac = cfg.min_lr_frac + (1.0 - cfg.min_lr_frac) * cos
+    return cfg.lr * warm * frac
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def _is_factored(p, cfg: OptConfig) -> bool:
+    return (cfg.factored and p.ndim >= 2
+            and p.shape[-1] >= cfg.factored_min_size
+            and p.shape[-2] >= cfg.factored_min_size)
+
+
+def adamw_init(params, cfg: OptConfig):
+    mdtype = jnp.dtype(cfg.momentum_dtype)
+
+    def init_leaf(p):
+        state = {"m": jnp.zeros(p.shape, mdtype)}
+        if _is_factored(p, cfg):
+            state["vr"] = jnp.zeros(p.shape[:-1], jnp.float32)       # row stats
+            state["vc"] = jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        else:
+            state["v"] = jnp.zeros(p.shape, jnp.float32)
+        return state
+
+    return {"step": jnp.zeros((), jnp.int32),
+            "ema": jax.tree.map(init_leaf, params)}
+
+
+def _no_decay(path) -> bool:
+    pathstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+    for token in ("scale", "bias", "b1", "b2", "bq", "bk", "bv", "gn_scale",
+                  "b_if", "b_gates", "lam", "pos"):
+        if pathstr.endswith(token):
+            return True
+    return False
+
+
+@jax.named_scope("adamw")
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p, g, s):
+        g = g.astype(jnp.float32) * scale
+        m = s["m"].astype(jnp.float32) * cfg.b1 + g * (1 - cfg.b1)
+        if "v" in s:
+            v = s["v"] * cfg.b2 + jnp.square(g) * (1 - cfg.b2)
+            denom = jnp.sqrt(v / bc2) + cfg.eps
+            new_s = {"m": m.astype(s["m"].dtype), "v": v}
+        else:
+            g2 = jnp.square(g) + 1e-30
+            vr = s["vr"] * cfg.b2 + g2.mean(-1) * (1 - cfg.b2)
+            vc = s["vc"] * cfg.b2 + g2.mean(-2) * (1 - cfg.b2)
+            # rank-1 reconstruction: v ~= vr vc / mean(vr)
+            vhat = (vr[..., None] * vc[..., None, :]
+                    / jnp.maximum(vr.mean(-1, keepdims=True)[..., None], 1e-30))
+            denom = jnp.sqrt(vhat / bc2) + cfg.eps
+            new_s = {"m": m.astype(s["m"].dtype), "vr": vr, "vc": vc}
+        update = (m / bc1) / denom
+        if cfg.weight_decay and not _no_decay(path):
+            update = update + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), new_s
+
+    flat = jax.tree_util.tree_map_with_path(
+        lambda path, p, g, s: upd(path, p, g, s), params, grads, state["ema"],
+        is_leaf=lambda x: isinstance(x, jax.Array))
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_ema = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"step": step, "ema": new_ema}, metrics

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    RooflineReport,
+    analyze_compiled,
+    collective_bytes_from_hlo,
+    model_flops,
+)
+
+__all__ = ["RooflineReport", "analyze_compiled", "collective_bytes_from_hlo",
+           "model_flops"]

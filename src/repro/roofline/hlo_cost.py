@@ -1,0 +1,635 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` counts a ``while`` body ONCE,
+not × trip count (verified: a 10-step scanned matmul reports 1/10 the FLOPs
+of its unrolled twin).  This framework scans over layers, microbatches, K/V
+blocks and mLSTM chunks, so XLA's aggregate under-reports by 1–3 orders of
+magnitude.  This module re-derives the three roofline inputs from the
+optimized per-partition HLO itself:
+
+  * **flops**        — 2·M·N·K for every ``dot`` (batch dims included),
+                       + 1/elem for float elementwise ops (transcendentals
+                       weighted ``TRANSCENDENTAL_WEIGHT``);
+  * **bytes**        — fusion-aware: operands + results of top-level ops in
+                       each computation (ops inside a fused computation are
+                       free, the fusion's own operands/results are the HBM
+                       traffic) — the same model XLA's own analysis uses;
+  * **collectives**  — output bytes per all-gather / all-reduce /
+                       reduce-scatter / all-to-all / collective-permute,
+                       tallied per kind;
+
+with ``while`` ops contributing ``trip_count × (body + cond)``.  Trip counts
+are parsed from jax's canonical loop condition (``ROOT compare(gte(i),
+constant(N)), direction=LT``); an unparsable loop falls back to 1 with a
+warning flag so nothing silently misreports.
+
+Validated against XLA's cost_analysis on fully-unrolled probe programs
+(where XLA is correct) in ``tests/test_roofline.py``.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+__all__ = ["HloCost", "analyze_hlo_text"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0, "tuple": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "select", "compare", "and", "or", "xor", "not", "clamp",
+    "floor", "ceil", "round-nearest-afz", "round-nearest-even", "sign",
+}
+_TRANSCENDENTAL = {
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "rsqrt",
+    "sqrt", "cbrt", "tanh", "logistic", "erf", "sine", "cosine", "atan2",
+    "power",
+}
+TRANSCENDENTAL_WEIGHT = 1.0
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota", "partition-id", "replica-id", "domain",
+    "opt-barrier",
+}
+
+
+def _shape_elems_bytes(type_str: str):
+    """(total elements, total bytes) of all array shapes in a type string."""
+    elems = 0
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        total += n * _DTYPE_BYTES[dtype]
+    return elems, total
+
+
+def _dims_of(type_str: str):
+    """Dims list of the FIRST array shape in a type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",") if d]
+
+
+# scope markers: jax.named_scope labels planted in the model code; the
+# innermost marker present in an op's metadata op_name wins.  Keeps roofline
+# attribution (which component owns the bytes/flops) stable under fusion.
+SCOPE_MARKERS = (
+    "attn_scores", "attn_pv", "attn_decode", "attn_qkv", "attn_out",
+    "moe_gate", "moe_dispatch", "moe_ffn", "moe_combine", "moe_shared",
+    "mlp", "lm_head", "loss", "adamw", "embed", "norm", "rope",
+    "rglru", "mlstm", "slstm",
+)
+
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _scope_of(attrs: str) -> str:
+    m = _OPNAME_RE.search(attrs)
+    if not m:
+        return "other"
+    path = m.group(1)
+    best, best_pos = "other", -1
+    for marker in SCOPE_MARKERS:
+        pos = path.rfind(marker)
+        if pos > best_pos:
+            best, best_pos = marker, pos
+    return best
+
+
+@dataclass
+class _Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class _Computation:
+    name: str
+    ops: dict = field(default_factory=dict)     # name -> _Op
+    order: list = field(default_factory=list)
+
+
+# op line inside a computation body, e.g.:
+#   %dot.5 = f32[8,128]{1,0} dot(%a, %b), lhs_contracting_dims={1}, ...
+_OP_RE = re.compile(
+    r"^\s*(ROOT\s+)?%?([\w.\-]+)\s*=\s*((?:\([^)]*\)|[\w\[\]{},\/ ]+?))\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+_COMP_HEAD_RE = re.compile(
+    r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(.*?\))?\s*->.*{\s*$")
+
+
+def parse_hlo(text: str) -> tuple[dict, str | None]:
+    """Parse HLO text into {comp_name: _Computation}; returns entry name."""
+    comps: dict[str, _Computation] = {}
+    entry = None
+    cur: _Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEAD_RE.match(line)
+            if m and line.endswith("{"):
+                cur = _Computation(m.group(1))
+                if line.lstrip().startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        else:
+            if line.strip() == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            root, name, rtype, opcode, operand_str, attrs = m.groups()
+            operands = [o.strip().lstrip("%")
+                        for o in _split_operands(operand_str)]
+            cur.ops[name] = _Op(name, opcode, rtype.strip(), operands, attrs,
+                                is_root=bool(root))
+            cur.order.append(name)
+    return comps, entry
+
+
+def _split_operands(s: str) -> list:
+    """Split top-level commas (operand lists may contain nested parens)."""
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    # operands may be "%name" or "typed %name" or "f32[] constant(..)" inline
+    cleaned = []
+    for o in out:
+        o = o.strip()
+        if not o:
+            continue
+        toks = o.split()
+        cleaned.append(toks[-1].lstrip("%"))
+    return cleaned
+
+
+_CALLS_RE = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                       r"({[^}]*}|%?[\w.\-]+)")
+
+
+def _called_comps(attrs: str) -> dict:
+    """{kind: [computation names]} referenced in an op's attrs."""
+    out = {}
+    for m in re.finditer(
+            r"(calls|to_apply|body|condition)=\s*(%?[\w.\-]+)", attrs):
+        out.setdefault(m.group(1), []).append(m.group(2).lstrip("%"))
+    m = re.search(r"branch_computations=\{([^}]*)\}", attrs)
+    if m:
+        out["branches"] = [x.strip().lstrip("%")
+                           for x in m.group(1).split(",")]
+    return out
+
+
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _trip_count(comps: dict, while_op: "_Op", cond_name: str | None) -> int | None:
+    """Trip count of a while op.
+
+    Primary: XLA's ``backend_config known_trip_count`` annotation on the
+    while op itself (emitted for all jax scans).  Fallback: parse the
+    canonical loop bound from the condition, ROOT compare(gte(i), const N)
+    direction=LT — following one fusion indirection if needed.
+    """
+    m = _TRIP_RE.search(while_op.attrs)
+    if m:
+        return int(m.group(1))
+    if cond_name is None:
+        return None
+    cond = comps.get(cond_name)
+    if cond is None:
+        return None
+    root = None
+    for name in cond.order:
+        if cond.ops[name].is_root:
+            root = cond.ops[name]
+    if root is None:
+        return None
+
+    def resolve_const(comp, op_name):
+        op = comp.ops.get(op_name)
+        if op is None:
+            return None
+        if op.opcode == "constant":
+            try:
+                return int(op.operands[0])
+            except (IndexError, ValueError):
+                return None
+        return None
+
+    if root.opcode == "fusion":
+        # condition wrapped: ROOT fusion(gte, constant) calls compare
+        called = _called_comps(root.attrs).get("calls", [])
+        inner = comps.get(called[0]) if called else None
+        inner_root = None
+        if inner:
+            for name in inner.order:
+                if inner.ops[name].is_root:
+                    inner_root = inner.ops[name]
+        consts = [v for v in
+                  (resolve_const(cond, o) for o in root.operands)
+                  if v is not None]
+        if inner_root is not None and inner_root.opcode == "compare" and consts:
+            return consts[0]
+        return None
+    if root.opcode == "compare" and len(root.operands) == 2:
+        dirn = re.search(r"direction=(\w+)", root.attrs)
+        direction = dirn.group(1) if dirn else "LT"
+        lv = resolve_const(cond, root.operands[0])
+        rv = resolve_const(cond, root.operands[1])
+        if direction in ("LT", "NE") and rv is not None:
+            return rv
+        if direction in ("GT", "NE") and lv is not None:
+            return lv
+    return None
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    transcendentals: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    collectives: dict = field(default_factory=lambda: {
+        k: {"count": 0, "bytes": 0.0} for k in _COLLECTIVES})
+    by_scope: dict = field(default_factory=dict)   # scope -> {flops, bytes, coll}
+    unparsed_loops: int = 0
+
+    def _scope(self, s: str) -> dict:
+        return self.by_scope.setdefault(
+            s, {"flops": 0.0, "bytes": 0.0, "collective_bytes": 0.0})
+
+    def add_leaf(self, scope: str, flops=0.0, bytes_=0.0, coll=0.0,
+                 transcendental=0.0):
+        self.flops += flops
+        self.transcendentals += transcendental
+        self.bytes_accessed += bytes_
+        self.collective_bytes += coll
+        sc = self._scope(scope)
+        sc["flops"] += flops
+        sc["bytes"] += bytes_
+        sc["collective_bytes"] += coll
+
+    def scaled(self, k: float) -> "HloCost":
+        out = HloCost(
+            flops=self.flops * k,
+            transcendentals=self.transcendentals * k,
+            bytes_accessed=self.bytes_accessed * k,
+            collective_bytes=self.collective_bytes * k,
+            unparsed_loops=self.unparsed_loops,
+        )
+        out.collectives = {
+            kk: {"count": v["count"] * k, "bytes": v["bytes"] * k}
+            for kk, v in self.collectives.items()}
+        out.by_scope = {
+            s: {kk: vv * k for kk, vv in v.items()}
+            for s, v in self.by_scope.items()}
+        return out
+
+    def __iadd__(self, o: "HloCost") -> "HloCost":
+        self.flops += o.flops
+        self.transcendentals += o.transcendentals
+        self.bytes_accessed += o.bytes_accessed
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collectives.items():
+            self.collectives[k]["count"] += v["count"]
+            self.collectives[k]["bytes"] += v["bytes"]
+        for s, v in o.by_scope.items():
+            sc = self._scope(s)
+            for kk, vv in v.items():
+                sc[kk] += vv
+        self.unparsed_loops += o.unparsed_loops
+        return self
+
+
+def _dot_flops(op: _Op, comp: _Computation) -> float:
+    """2 × |result| × contracted-size."""
+    relems, _ = _shape_elems_bytes(op.result_type)
+    lhs = comp.ops.get(op.operands[0]) if op.operands else None
+    csize = 1
+    if lhs is not None:
+        ldims = _dims_of(lhs.result_type)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        if m:
+            for d in m.group(1).split(","):
+                if d and int(d) < len(ldims):
+                    csize *= ldims[int(d)]
+    return 2.0 * relems * csize
+
+
+def _conv_flops(op: _Op, comp: _Computation) -> float:
+    """2 × |result| × (kernel spatial × in-channels) — rough but present."""
+    relems, _ = _shape_elems_bytes(op.result_type)
+    if len(op.operands) < 2:
+        return 0.0
+    ker = comp.ops.get(op.operands[1])
+    if ker is None:
+        return 0.0
+    kdims = _dims_of(ker.result_type)
+    ksize = 1
+    for d in kdims[:-1]:       # all but output-feature dim (approx)
+        ksize *= d
+    return 2.0 * relems * ksize
+
+
+def _cost_of_computation(comps: dict, name: str, memo: dict,
+                         fused: bool = False) -> HloCost:
+    if (name, fused) in memo:
+        return memo[(name, fused)]
+    comp = comps.get(name)
+    cost = HloCost()
+    if comp is None:
+        memo[(name, fused)] = cost
+        return cost
+    for op_name in comp.order:
+        op = comp.ops[op_name]
+        oc = op.opcode
+        if oc in _FREE_OPS:
+            continue
+        called = _called_comps(op.attrs)
+
+        if oc == "while":
+            body = called.get("body", [None])[0]
+            cond = called.get("condition", [None])[0]
+            trips = _trip_count(comps, op, cond)
+            if trips is None:
+                trips = 1
+                cost.unparsed_loops += 1
+            inner = HloCost()
+            if body:
+                inner += _cost_of_computation(comps, body, memo)
+            if cond:
+                inner += _cost_of_computation(comps, cond, memo)
+            cost += inner.scaled(trips)
+            continue
+
+        if oc == "conditional":
+            branches = called.get("branches", [])
+            if branches:
+                worst = max(
+                    (_cost_of_computation(comps, b, memo) for b in branches),
+                    key=lambda c: c.flops + c.bytes_accessed)
+                cost += worst
+            continue
+
+        if oc == "call" or oc.startswith("async"):
+            for b in called.get("to_apply", []) + called.get("calls", []):
+                cost += _cost_of_computation(comps, b, memo)
+            continue
+
+        scope = _scope_of(op.attrs)
+
+        if oc == "fusion":
+            # traffic = the fusion's own operands + result, with slice-aware
+            # discounting (a fused dynamic-slice reads only the slice; a
+            # root dynamic-update-slice writes only the update region)
+            fbytes = 0.0
+            if not fused:
+                fbytes = _fusion_traffic(op, comp, comps, called)
+            cost.add_leaf(scope, bytes_=fbytes)
+            # … compute = the fused computation's flops (bytes suppressed)
+            for b in called.get("calls", []):
+                inner = _cost_of_computation(comps, b, memo, fused=True)
+                # attribute the fused flops to the fusion's own scope
+                cost.add_leaf(scope, flops=inner.flops,
+                              coll=inner.collective_bytes,
+                              transcendental=inner.transcendentals)
+                for k, v in inner.collectives.items():
+                    cost.collectives[k]["count"] += v["count"]
+                    cost.collectives[k]["bytes"] += v["bytes"]
+            continue
+
+        # ------- leaf ops
+        kind = None
+        for c in _COLLECTIVES:
+            if oc == c or oc.startswith(c + "-"):
+                kind = c
+                break
+        if kind is not None and not oc.endswith("-done"):
+            _, obytes = _shape_elems_bytes(op.result_type)
+            cost.add_leaf(scope, coll=obytes)
+            cost.collectives[kind]["count"] += 1
+            cost.collectives[kind]["bytes"] += obytes
+
+        relems, rbytes = _shape_elems_bytes(op.result_type)
+        flops = 0.0
+        transc = 0.0
+        if oc == "dot":
+            flops = _dot_flops(op, comp)
+        elif oc == "convolution":
+            flops = _conv_flops(op, comp)
+        elif oc in _ELEMENTWISE:
+            flops = relems
+        elif oc in _TRANSCENDENTAL:
+            flops = relems * TRANSCENDENTAL_WEIGHT
+            transc = relems
+        elif oc in ("reduce", "reduce-window"):
+            # ~1 flop per input element
+            for o in op.operands[: max(1, len(op.operands) // 2)]:
+                src = comp.ops.get(o)
+                if src is not None:
+                    e, _ = _shape_elems_bytes(src.result_type)
+                    flops += e
+
+        bytes_ = 0.0
+        if not fused:
+            bytes_ = _leaf_traffic(op, comp)
+        cost.add_leaf(scope, flops=flops, bytes_=bytes_, transcendental=transc)
+
+    memo[(name, fused)] = cost
+    return cost
+
+
+def _operand_bytes(comp: _Computation, name: str) -> float:
+    src = comp.ops.get(name)
+    if src is None:
+        return 0.0
+    _, b = _shape_elems_bytes(src.result_type)
+    return b
+
+
+def _leaf_traffic(op: _Op, comp: _Computation) -> float:
+    """HBM traffic of a top-level op, slice-aware.
+
+    In-place / windowed ops move only the touched region, not the whole
+    operand (XLA aliases the rest): dynamic-slice reads the slice;
+    dynamic-update-slice reads+writes the update region; gather/scatter
+    move result/update-sized data plus indices.
+    """
+    _, rbytes = _shape_elems_bytes(op.result_type)
+    oc = op.opcode
+    if oc == "dynamic-slice" or oc == "slice":
+        return 2.0 * rbytes                     # read slice + write result
+    if oc == "dynamic-update-slice":
+        upd = _operand_bytes(comp, op.operands[1]) if len(op.operands) > 1 else 0.0
+        return 2.0 * upd                        # read update + write region
+    if oc == "gather":
+        idx = _operand_bytes(comp, op.operands[1]) if len(op.operands) > 1 else 0.0
+        return 2.0 * rbytes + idx
+    if oc == "scatter":
+        upd = _operand_bytes(comp, op.operands[2]) if len(op.operands) > 2 else 0.0
+        idx = _operand_bytes(comp, op.operands[1]) if len(op.operands) > 1 else 0.0
+        return 2.0 * upd + idx + rbytes * 0.0   # output aliases the operand
+    total = rbytes
+    for o in op.operands:
+        total += _operand_bytes(comp, o)
+    return total
+
+
+# unary ops that pass data through unchanged in size-relevance terms: a
+# parameter whose only path to the root goes through these then a slice op
+# is only read at the slice
+_PASSTHROUGH = {"convert", "bitcast", "copy", "reshape", "transpose",
+                "broadcast"}
+
+
+def _fusion_traffic(op: _Op, comp: _Computation, comps: dict,
+                    called: dict) -> float:
+    """Operand+result traffic of a fusion op with slice-aware discounts.
+
+    Inside a fusion only root-needed elements are computed, so (a) an operand
+    consumed exclusively by dynamic-slice ops (possibly via convert/bitcast/
+    reshape chains) is read only at the slices; (b) a root that is a
+    dynamic-update-slice (again possibly wrapped) writes only the update —
+    the rest aliases in place.  These are exactly jax's scan param-slicing
+    and KV-cache-update patterns.
+    """
+    fcomps = [comps.get(c) for c in called.get("calls", [])]
+    fcomp = fcomps[0] if fcomps and fcomps[0] is not None else None
+    if fcomp is None:
+        _, rbytes = _shape_elems_bytes(op.result_type)
+        total = rbytes
+        for o in op.operands:
+            total += _operand_bytes(comp, o)
+        return total
+
+    # map fused-computation parameter name -> operand index
+    param_of = {}
+    for oname in fcomp.order:
+        o = fcomp.ops[oname]
+        if o.opcode == "parameter":
+            idx = int(o.operands[0]) if o.operands and o.operands[0].isdigit() \
+                else None
+            if idx is not None:
+                param_of[oname] = idx
+
+    uses: dict[str, list] = {}
+    for oname in fcomp.order:
+        o = fcomp.ops[oname]
+        for pos, operand in enumerate(o.operands):
+            uses.setdefault(operand, []).append((o, pos))
+
+    def effective_uses(name, depth=0):
+        """Uses of ``name`` with pass-through unary chains collapsed."""
+        out = []
+        for u, pos in uses.get(name, []):
+            if u.opcode in _PASSTHROUGH and len(u.operands) == 1 and depth < 6:
+                out.extend(effective_uses(u.name, depth + 1))
+            else:
+                out.append((u, pos))
+        return out
+
+    total = 0.0
+    operand_count = len(op.operands)
+    for pname, idx in param_of.items():
+        if idx >= operand_count:
+            continue
+        full = _operand_bytes(comp, op.operands[idx])
+        use_list = effective_uses(pname)
+        if use_list and all(u.opcode in ("dynamic-slice", "slice") and pos == 0
+                            for u, pos in use_list):
+            sliced = 0.0
+            for u, _ in use_list:
+                _, b = _shape_elems_bytes(u.result_type)
+                sliced += b
+            total += min(full, sliced)
+        elif use_list and all(u.opcode == "dynamic-update-slice" and pos == 0
+                              for u, pos in use_list):
+            upd = 0.0
+            for u, _ in use_list:
+                if len(u.operands) > 1:
+                    upd += _operand_bytes(fcomp, u.operands[1])
+            total += min(full, upd)            # read-modify only the region
+        else:
+            total += full
+
+    # result traffic: unwrap the root through pass-through ops; a DUS root
+    # (or a tuple of DUS elements) writes only the update regions
+    def unwrap(name, depth=0):
+        o = fcomp.ops.get(name)
+        if o is None:
+            return None
+        if o.opcode in _PASSTHROUGH and len(o.operands) == 1 and depth < 6:
+            return unwrap(o.operands[0], depth + 1)
+        return o
+
+    root = None
+    for oname in fcomp.order:
+        if fcomp.ops[oname].is_root:
+            root = fcomp.ops[oname]
+    _, rbytes = _shape_elems_bytes(op.result_type)
+    if root is not None:
+        elems = ([root.operands[i] for i in range(len(root.operands))]
+                 if root.opcode == "tuple" else [root.name])
+        wrote = 0.0
+        all_dus = True
+        for e in elems:
+            eo = unwrap(e)
+            if eo is not None and eo.opcode == "dynamic-update-slice" \
+                    and len(eo.operands) > 1:
+                wrote += _operand_bytes(fcomp, eo.operands[1])
+            else:
+                all_dus = False
+                break
+        if all_dus and elems:
+            total += min(rbytes, wrote)
+            return total
+    total += rbytes
+    return total
+
+
+def analyze_hlo_text(text: str) -> HloCost:
+    """Trip-count-aware cost of the entry computation of an HLO module."""
+    comps, entry = parse_hlo(text)
+    if entry is None:
+        # fall back: largest computation
+        entry = max(comps, key=lambda n: len(comps[n].order)) if comps else None
+    if entry is None:
+        return HloCost()
+    return _cost_of_computation(comps, entry, {})

@@ -1,0 +1,5 @@
+from repro.train.step import TrainConfig, make_train_step, make_serve_step
+from repro.train.loop import TrainLoop, LoopConfig
+
+__all__ = ["TrainConfig", "make_train_step", "make_serve_step", "TrainLoop",
+           "LoopConfig"]

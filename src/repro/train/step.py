@@ -1,0 +1,146 @@
+"""Step builders: the jitted train / prefill / decode step for any arch.
+
+``make_train_step`` returns a ``jax.jit``-wrapped function
+``(params, opt_state, batch) -> (params, opt_state, metrics)`` with:
+
+  * loss = LM cross-entropy (+ MoE aux loss) via ``models.model.lm_loss``;
+  * gradient accumulation over ``accum_steps`` microbatches
+    (``jax.lax.scan`` over a leading microbatch axis — constant compile
+    size, the standard pod-scale memory lever);
+  * AdamW update (``optim.adamw``), donated params/opt_state
+    (``donate_argnums``) so the update is in-place in HBM;
+  * optional in/out shardings from the sharding rules (GSPMD path).
+
+``make_serve_step`` returns the prefill and decode steps used by the
+serving engine and the dry-run's decode cells.
+
+Everything here is mesh-agnostic: pass ``rules=None`` for single-device
+(smoke tests), or ``ShardingRules`` for the production mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import (ShardingRules, param_sharding_rules,
+                                 use_rules)
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_update
+
+__all__ = ["TrainConfig", "make_train_step", "make_serve_step"]
+
+
+@dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    accum_steps: int = 1          # microbatch count (grad accumulation)
+    aux_weight: float = 0.01      # MoE load-balance loss weight
+    task_id: int = 0
+
+
+def _split_microbatches(batch, n: int):
+    """(B, ...) -> (n, B/n, ...) for every leaf."""
+    def split(x):
+        b = x.shape[0]
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, tcfg: TrainConfig,
+                    rules: Optional[ShardingRules] = None,
+                    loss_fn: Optional[Callable] = None,
+                    donate: bool = True, jit: bool = True):
+    """Build the jitted train step.  ``loss_fn(params, micro) -> (loss, m)``
+    defaults to the LM loss; M³ViT passes its multitask loss instead.
+    ``jit=False`` returns the raw function (the dry-run re-jits it with
+    explicit in_shardings)."""
+
+    loss_fn = loss_fn or (lambda p, mb: M.lm_loss(
+        p, mb, cfg, aux_weight=tcfg.aux_weight, task_id=tcfg.task_id))
+
+    def constrain_like_params(tree):
+        """Pin the gradient accumulator to the parameter sharding — without
+        this XLA keeps the scan carry REPLICATED and all-reduces the full
+        f32 gradient every microbatch (§Perf finding C3: ~full-model f32
+        bytes per microbatch of pure waste)."""
+        if rules is None or rules.mesh is None:
+            return tree
+        shardings = param_sharding_rules(tree, rules)
+        return jax.tree.map(jax.lax.with_sharding_constraint, tree, shardings)
+
+    def step(params, opt_state, batch):
+        with use_rules(rules):
+            if tcfg.accum_steps > 1:
+                micro = _split_microbatches(batch, tcfg.accum_steps)
+
+                def accum(carry, mb):
+                    gsum, lsum = carry
+                    (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb)
+                    gsum = constrain_like_params(
+                        jax.tree.map(jnp.add, gsum, g))
+                    return (gsum, lsum + loss), None
+
+                zeros = constrain_like_params(jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params))
+                (gsum, lsum), _ = jax.lax.scan(
+                    accum, (zeros, jnp.zeros((), jnp.float32)), micro)
+                grads = jax.tree.map(lambda g: g / tcfg.accum_steps, gsum)
+                loss = lsum / tcfg.accum_steps
+            else:
+                (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, batch)
+            params2, opt_state2, om = adamw_update(params, grads, opt_state,
+                                                   tcfg.opt)
+            # in-step NaN guard: a non-finite loss (corrupt batch, overflow)
+            # must not poison the weights.  The guard lives INSIDE the jit
+            # because donated input buffers are consumed by the call — the
+            # host cannot "keep the old params" after the fact.
+            ok = jnp.isfinite(loss)
+            params2 = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), params2, params)
+            opt_state2 = jax.tree.map(
+                lambda n, o: jnp.where(ok, n, o), opt_state2, opt_state)
+            metrics = {"loss": loss, **om,
+                       "skipped": (~ok).astype(jnp.int32)}
+            return params2, opt_state2, metrics
+
+    if not jit:
+        return step
+    if donate:
+        return jax.jit(step, donate_argnums=(0, 1))
+    return jax.jit(step)
+
+
+def make_serve_step(cfg: ArchConfig, rules: Optional[ShardingRules] = None,
+                    task_id: int = 0, jit: bool = True):
+    """Returns (prefill_fn, decode_fn), both jitted.
+
+    prefill(params, tokens, state)        -> (logits_last, state)
+    decode(params, token, state, index)   -> (logits, state)
+    """
+
+    def prefill(params, inputs, state):
+        with use_rules(rules):
+            logits, new_state, _ = M.forward(
+                params, inputs, cfg, state=state, cache_index=0,
+                task_id=task_id, return_state=True, logits_mode="last")
+            return logits[:, -1], new_state
+
+    def decode(params, inputs, state, cache_index):
+        with use_rules(rules):
+            logits, new_state, _ = M.forward(
+                params, inputs, cfg, state=state, cache_index=cache_index,
+                decode=True, task_id=task_id, return_state=True)
+            return logits[:, -1], new_state
+
+    if not jit:
+        return prefill, decode
+    return (jax.jit(prefill, donate_argnums=(2,)),
+            jax.jit(decode, donate_argnums=(2,)))

@@ -1,0 +1,11 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests must see the
+container's single CPU device (the 512-device flag belongs ONLY to
+launch/dryrun.py)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

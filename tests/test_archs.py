@@ -1,0 +1,136 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs.
+
+The FULL configs are exercised only by the 512-device dry-run
+(launch/dryrun.py); these tests prove every family's block structure,
+init, loss, and gradient path work end to end.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_init
+from repro.train import TrainConfig, make_train_step
+
+ARCHS = configs.list_archs()
+
+
+def make_batch(cfg, b=2, s=16, seed=0):
+    key = jax.random.PRNGKey(seed)
+    if cfg.embed_input == "tokens":
+        inputs = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    else:
+        inputs = jax.random.normal(key, (b, s, cfg.d_model),
+                                   dtype=cfg.activation_dtype)
+    labels = jax.random.randint(key, (b, s), 0, max(cfg.vocab_size, 2))
+    return {"inputs": inputs, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+class TestArchSmoke:
+    def test_forward_shapes_no_nan(self, arch):
+        cfg = configs.get(arch, smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        batch = make_batch(cfg)
+        logits, _, aux = M.forward(params, batch["inputs"], cfg)
+        b, s = batch["labels"].shape
+        want_v = cfg.vocab_size if cfg.vocab_size else cfg.d_model
+        assert logits.shape == (b, s, want_v)
+        assert not bool(jnp.isnan(logits).any())
+        assert np.isfinite(float(aux))
+
+    def test_train_step(self, arch):
+        cfg = configs.get(arch, smoke=True)
+        if cfg.vocab_size == 0:
+            pytest.skip("vit trunk trained via models/vit.py (test_vit)")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2,
+                                         total_steps=10))
+        opt_state = adamw_init(params, tcfg.opt)
+        step = make_train_step(cfg, tcfg, donate=False)
+        batch = make_batch(cfg)
+        p1, o1, m1 = step(params, opt_state, batch)
+        assert np.isfinite(float(m1["loss"]))
+        # params actually moved
+        delta = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            params, p1)
+        assert max(jax.tree.leaves(delta)) > 0
+
+    def test_decode_step(self, arch):
+        cfg = configs.get(arch, smoke=True)
+        if cfg.vocab_size == 0:
+            pytest.skip("encoder trunk has no decode step")
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        b, max_len = 2, 32
+        state = M.init_state(cfg, b, max_len)
+        batch = make_batch(cfg, b=b, s=8)
+        # prefill
+        logits, state, _ = M.forward(params, batch["inputs"], cfg,
+                                     state=state, cache_index=0,
+                                     return_state=True, logits_mode="last")
+        assert logits.shape[1] == 1
+        # one decode step
+        if cfg.embed_input == "tokens":
+            tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        else:
+            tok = jax.random.normal(jax.random.PRNGKey(1),
+                                    (b, 1, cfg.d_model),
+                                    dtype=cfg.activation_dtype)
+        logits2, state2, _ = M.forward(params, tok, cfg, state=state,
+                                       cache_index=8, decode=True,
+                                       return_state=True)
+        assert logits2.shape == (b, 1, cfg.vocab_size)
+        assert not bool(jnp.isnan(logits2).any())
+
+
+class TestConfigIntegrity:
+    """The assigned dimension tables, verbatim."""
+
+    @pytest.mark.parametrize("arch,dims", [
+        ("musicgen_large", (48, 2048, 32, 32, 8192, 2048)),
+        ("llama3_2_1b", (16, 2048, 32, 8, 8192, 128256)),
+        ("qwen1_5_4b", (40, 2560, 20, 20, 6912, 151936)),
+        ("deepseek_67b", (95, 8192, 64, 8, 22016, 102400)),
+        ("phi4_mini_3_8b", (32, 3072, 24, 8, 8192, 200064)),
+        ("qwen2_vl_72b", (80, 8192, 64, 8, 29568, 152064)),
+        ("xlstm_350m", (24, 1024, 4, 4, 0, 50304)),
+        ("recurrentgemma_9b", (38, 4096, 16, 1, 12288, 256000)),
+        ("llama4_scout_17b_a16e", (48, 5120, 40, 8, 8192, 202048)),
+        ("kimi_k2_1t_a32b", (61, 7168, 64, 8, 2048, 163840)),
+    ])
+    def test_assigned_dims(self, arch, dims):
+        cfg = configs.get(arch)
+        got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+               cfg.d_ff, cfg.vocab_size)
+        assert got == dims
+
+    def test_moe_specs(self):
+        k2 = configs.get("kimi_k2_1t_a32b")
+        assert k2.moe.num_experts == 384 and k2.moe.top_k == 8
+        l4 = configs.get("llama4_scout_17b_a16e")
+        assert l4.moe.num_experts == 16 and l4.moe.top_k == 1
+
+    def test_param_counts_plausible(self):
+        """Analytical param counts land in the advertised ballparks."""
+        assert 0.9e9 < configs.get("llama3_2_1b").param_count() < 1.8e9
+        assert 55e9 < configs.get("deepseek_67b").param_count() < 75e9
+        assert 0.8e12 < configs.get("kimi_k2_1t_a32b").param_count() < 1.3e12
+        k2 = configs.get("kimi_k2_1t_a32b")
+        assert 20e9 < k2.active_param_count() < 45e9      # ~32B active
+
+    def test_long_context_applicability(self):
+        """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+        runnable = {a for a, s, r in configs.cells() if s == "long_500k" and r}
+        assert runnable == {"xlstm_350m", "recurrentgemma_9b"}
+
+    def test_cell_count(self):
+        """10 archs × 4 shapes = 40 assigned; 32 runnable + 8 noted skips."""
+        all_cells = configs.cells(include_skipped=True)
+        assert len(all_cells) == 40
+        assert sum(1 for _, _, r in all_cells if r) == 32

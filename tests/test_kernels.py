@@ -1,0 +1,144 @@
+"""Pallas kernel sweeps: shapes × dtypes vs the pure-jnp ref.py oracles.
+
+All kernels run in interpret=True on CPU (the kernel body executes exactly
+the TPU schedule; Mosaic lowering is exercised on real TPU hardware).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+F32 = jnp.float32
+BF16 = jnp.bfloat16
+
+
+def tol(dtype):
+    return dict(atol=3e-5, rtol=3e-5) if dtype == F32 else dict(atol=3e-2,
+                                                                rtol=3e-2)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("shape", [
+        (1, 4, 4, 128, 128, 64),    # MHA, aligned
+        (2, 8, 2, 100, 100, 32),    # GQA, ragged
+        (1, 4, 1, 33, 160, 16),     # MQA, q<k
+        (1, 2, 2, 256, 64, 128),    # q>k
+    ])
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    def test_vs_oracle(self, rng, shape, dtype):
+        b, hq, hkv, sq, skv, d = shape
+        q = jnp.asarray(rng.normal(size=(b, hq, sq, d)), dtype)
+        k = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+        v = jnp.asarray(rng.normal(size=(b, hkv, skv, d)), dtype)
+        got = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+        want = ref.ref_attention(q, k, v)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    @pytest.mark.parametrize("causal", [True, False])
+    @pytest.mark.parametrize("window", [None, 32])
+    def test_masks(self, rng, causal, window):
+        q = jnp.asarray(rng.normal(size=(1, 2, 96, 32)), F32)
+        k = jnp.asarray(rng.normal(size=(1, 2, 96, 32)), F32)
+        v = jnp.asarray(rng.normal(size=(1, 2, 96, 32)), F32)
+        got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                                  block_q=32, block_k=32)
+        want = ref.ref_attention(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_q_offset(self, rng):
+        q = jnp.asarray(rng.normal(size=(1, 2, 32, 32)), F32)
+        k = jnp.asarray(rng.normal(size=(1, 2, 96, 32)), F32)
+        v = jnp.asarray(rng.normal(size=(1, 2, 96, 32)), F32)
+        got = ops.flash_attention(q, k, v, q_offset=64, block_q=32,
+                                  block_k=32)
+        want = ref.ref_attention(q, k, v, q_offset=64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+
+class TestUnifiedLinear:
+    @pytest.mark.parametrize("mnk", [(70, 200, 96), (128, 128, 128),
+                                     (1, 500, 33), (300, 64, 256)])
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    def test_shapes_dtypes(self, rng, mnk, dtype):
+        m, n, k = mnk
+        x = jnp.asarray(rng.normal(size=(m, k)), dtype)
+        w = jnp.asarray(rng.normal(size=(k, n)), dtype)
+        got = ops.unified_linear(x, w, block_m=64, block_n=128, block_k=128)
+        want = ref.ref_linear(x, w)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32),
+                                   **tol(dtype))
+
+    @pytest.mark.parametrize("act", [None, "relu", "gelu", "silu"])
+    @pytest.mark.parametrize("lut", [False, True])
+    def test_fused_epilogue(self, rng, act, lut):
+        """④ fused with ③: bias + (LUT) activation in the GEMM epilogue."""
+        x = jnp.asarray(rng.normal(size=(64, 96)), F32)
+        w = jnp.asarray(rng.normal(size=(96, 160)), F32)
+        b = jnp.asarray(rng.normal(size=(160,)), F32)
+        got = ops.unified_linear(x, w, b, activation=act, use_lut=lut,
+                                 block_m=32, block_n=128, block_k=128)
+        want = ref.ref_linear(x, w, b, activation=act, use_lut=lut)
+        # LUT epilogues: a 1-ulp GEMM reassociation difference can flip a
+        # table bucket (step 2^-8), so allow one bucket of slack there
+        tol = 3e-3 if lut and act in ("gelu", "silu") else 3e-5
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=tol, rtol=tol)
+
+    def test_leading_dims_flattened(self, rng):
+        x = jnp.asarray(rng.normal(size=(2, 3, 8, 96)), F32)
+        w = jnp.asarray(rng.normal(size=(96, 64)), F32)
+        got = ops.unified_linear(x, w)
+        want = ref.ref_linear(x.reshape(-1, 96), w).reshape(2, 3, 8, 64)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+
+class TestMoEGemm:
+    @pytest.mark.parametrize("ecdf", [(4, 24, 48, 80), (8, 128, 64, 64),
+                                      (2, 5, 33, 100)])
+    @pytest.mark.parametrize("dtype", [F32, BF16])
+    def test_vs_oracle(self, rng, ecdf, dtype):
+        e, c, d, f = ecdf
+        buf = jnp.asarray(rng.normal(size=(e, c, d)), dtype)
+        w = jnp.asarray(rng.normal(size=(e, d, f)), dtype)
+        sizes = jnp.asarray(rng.integers(0, c + 1, size=(e,)), jnp.int32)
+        got = ops.moe_gemm(buf, w, sizes, block_c=8, block_f=64, block_k=64)
+        want = ref.ref_moe_gemm(buf, w, sizes)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **tol(dtype))
+
+    def test_metaqueue_skip_zeroes(self, rng):
+        """Experts with size 0 are skipped (never touch the MXU) and output
+        exact zeros — the paper's 'skip the loading step' behaviour."""
+        buf = jnp.asarray(rng.normal(size=(3, 8, 16)), F32)
+        w = jnp.asarray(rng.normal(size=(3, 16, 32)), F32)
+        sizes = jnp.asarray([4, 0, 8], jnp.int32)
+        got = ops.moe_gemm(buf, w, sizes, block_c=8, block_f=128, block_k=128)
+        assert float(jnp.abs(got[1]).max()) == 0.0
+        assert float(jnp.abs(got[0]).max()) > 0.0
+
+
+class TestLutActivationKernel:
+    @pytest.mark.parametrize("kind", ["gelu", "silu"])
+    @pytest.mark.parametrize("n", [5, 128, 1000, 4097])
+    def test_vs_oracle(self, rng, kind, n):
+        x = jnp.asarray(rng.normal(size=(n,)) * 4, F32)
+        got = ops.lut_activation(x, kind)
+        want = ref.ref_lut_activation(x, kind)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-6)
+
+    def test_nd_input(self, rng):
+        x = jnp.asarray(rng.normal(size=(3, 17, 5)), F32)
+        got = ops.lut_activation(x, "gelu")
+        assert got.shape == x.shape
+        np.testing.assert_allclose(np.asarray(got),
+                                   np.asarray(ref.ref_lut_activation(x)),
+                                   atol=1e-6)

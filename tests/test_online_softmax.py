@@ -1,0 +1,97 @@
+"""Technique ② — single-pass dynamic-bias softmax (paper Algorithm 1)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import online_softmax as OS
+
+
+class TestAlgorithm1:
+    def test_matches_max_and_sum(self, rng):
+        x = jnp.asarray(rng.normal(size=(257,)) * 5, jnp.float32)
+        b, s = OS.online_max_sum(x)
+        np.testing.assert_allclose(b, np.max(np.asarray(x)), rtol=1e-6)
+        np.testing.assert_allclose(
+            s, np.sum(np.exp(np.asarray(x) - np.max(np.asarray(x)))),
+            rtol=1e-5)
+
+    def test_paper_example(self):
+        # Fig. 7: elements {0.2, 0.1, 0.3} in any order give the same (b, s)
+        import itertools
+
+        vals = [0.2, 0.1, 0.3]
+        expected_b = 0.3
+        expected_s = sum(np.exp(v - 0.3) for v in vals)
+        for perm in itertools.permutations(vals):
+            b, s = OS.online_max_sum(jnp.asarray(perm, jnp.float32))
+            np.testing.assert_allclose(b, expected_b, rtol=1e-6)
+            np.testing.assert_allclose(s, expected_s, rtol=1e-6)
+
+    def test_overflow_robustness(self):
+        # exp(90) overflows f32; the dynamic bias keeps everything finite —
+        # the paper's motivating failure mode (§III-A2)
+        x = jnp.asarray([88.0, 90.0, 7.0, -3.0], jnp.float32)
+        b, s = OS.online_max_sum(x)
+        assert np.isfinite(float(s)) and float(b) == 90.0
+        out = OS.softmax(x)
+        np.testing.assert_allclose(out, jax.nn.softmax(x), rtol=1e-6)
+        assert np.isfinite(np.asarray(out)).all()
+
+    def test_batched_axes(self, rng):
+        x = jnp.asarray(rng.normal(size=(4, 33)), jnp.float32)
+        b, s = OS.online_max_sum(x, axis=-1)
+        np.testing.assert_allclose(b, np.max(np.asarray(x), -1), rtol=1e-6)
+
+
+class TestBlocked:
+    @pytest.mark.parametrize("n,block", [(16, 4), (100, 32), (128, 128),
+                                         (7, 16), (1000, 64)])
+    def test_matches_sequential(self, rng, n, block):
+        x = jnp.asarray(rng.normal(size=(n,)) * 3, jnp.float32)
+        b1, s1 = OS.online_max_sum(x)
+        b2, s2 = OS.online_max_sum_blocked(x, block=block)
+        np.testing.assert_allclose(b1, b2, rtol=1e-6)
+        np.testing.assert_allclose(s1, s2, rtol=1e-5)
+
+    def test_softmax_blocked_equals_jax(self, rng):
+        x = jnp.asarray(rng.normal(size=(5, 200)) * 4, jnp.float32)
+        np.testing.assert_allclose(OS.softmax(x, block=64),
+                                   jax.nn.softmax(x, axis=-1), atol=1e-6)
+
+
+class TestMergeStats:
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(st.floats(-50, 50), min_size=1, max_size=20),
+           st.lists(st.floats(-50, 50), min_size=1, max_size=20))
+    def test_merge_equals_joint(self, xs, ys):
+        """(m,s) of A∪B == merge((m,s) of A, (m,s) of B) — the associativity
+        that makes the softmax one-pass AND ring/sequence-parallel."""
+        a = jnp.asarray(xs, jnp.float32)
+        b = jnp.asarray(ys, jnp.float32)
+        ma, sa = OS.online_max_sum(a)
+        mb, sb = OS.online_max_sum(b)
+        m, s = OS.merge_stats(ma, sa, mb, sb)
+        mj, sj = OS.online_max_sum(jnp.concatenate([a, b]))
+        np.testing.assert_allclose(m, mj, rtol=1e-6)
+        np.testing.assert_allclose(s, sj, rtol=1e-4)
+
+    def test_empty_side_identity(self):
+        m0 = jnp.float32(-jnp.inf)
+        s0 = jnp.float32(0.0)
+        m, s = OS.merge_stats(m0, s0, jnp.float32(1.5), jnp.float32(2.0))
+        assert float(m) == 1.5 and abs(float(s) - 2.0) < 1e-6
+
+
+class TestMaskedSoftmax:
+    def test_where_mask(self, rng):
+        x = jnp.asarray(rng.normal(size=(6, 50)), jnp.float32)
+        mask = jnp.asarray(rng.random((6, 50)) > 0.3)
+        got = OS.softmax(x, where=mask)
+        want = jax.nn.softmax(jnp.where(mask, x, -jnp.inf), axis=-1)
+        want = jnp.where(mask, want, 0.0)
+        np.testing.assert_allclose(got, want, atol=1e-6)
+        # masked entries must carry exactly zero probability
+        assert float(jnp.abs(jnp.where(mask, 0.0, got)).max()) == 0.0

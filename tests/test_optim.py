@@ -1,0 +1,112 @@
+"""AdamW optimizer: convergence, factored mode, clipping, schedule."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (OptConfig, adamw_init, adamw_update,
+                         cosine_schedule, global_norm)
+
+
+def quad_problem(seed=0, n=64):
+    rng = np.random.default_rng(seed)
+    target = jnp.asarray(rng.normal(size=(n, n)), jnp.float32)
+    params = {"w": jnp.zeros((n, n), jnp.float32),
+              "scale": jnp.ones((n,), jnp.float32)}
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    return params, loss, target
+
+
+def run(params, loss, cfg, steps=200):
+    state = adamw_init(params, cfg)
+    for _ in range(steps):
+        g = jax.grad(loss)(params)
+        params, state, m = adamw_update(params, g, state, cfg)
+    return params, float(loss(params))
+
+
+class TestConvergence:
+    def test_quadratic(self):
+        params, loss, target = quad_problem()
+        cfg = OptConfig(lr=0.05, weight_decay=0.0, warmup_steps=10,
+                        total_steps=200)
+        _, final = run(params, loss, cfg)
+        assert final < 0.01 * float(loss(params))
+
+    def test_factored_matches_full_direction(self):
+        """Factored second moment converges on the same problem."""
+        params, loss, _ = quad_problem()
+        full = OptConfig(lr=0.05, weight_decay=0.0, factored=False,
+                         warmup_steps=10, total_steps=200)
+        fact = OptConfig(lr=0.05, weight_decay=0.0, factored=True,
+                         factored_min_size=32, warmup_steps=10,
+                         total_steps=200)
+        _, l_full = run(params, loss, full)
+        _, l_fact = run(params, loss, fact)
+        assert l_fact < 0.05 * float(loss(params))
+        assert l_fact < 10 * max(l_full, 1e-6) + 1e-3
+
+    def test_factored_state_is_small(self):
+        params = {"w": jnp.zeros((512, 256), jnp.float32)}
+        cfg = OptConfig(factored=True)
+        st = adamw_init(params, cfg)
+        ema = st["ema"]["w"]
+        assert "v" not in ema
+        assert ema["vr"].shape == (512,) and ema["vc"].shape == (256,)
+
+    def test_bf16_momentum(self):
+        params, loss, _ = quad_problem(n=32)
+        cfg = OptConfig(lr=0.05, weight_decay=0.0,
+                        momentum_dtype="bfloat16", warmup_steps=10,
+                        total_steps=200)
+        st = adamw_init(params, cfg)
+        assert st["ema"]["w"]["m"].dtype == jnp.bfloat16
+        _, final = run(params, loss, cfg)
+        assert final < 0.05 * float(loss(params))
+
+
+class TestClipping:
+    def test_clip_bounds_update(self):
+        params = {"w": jnp.zeros((8,), jnp.float32)}
+        cfg = OptConfig(lr=1.0, clip_norm=1.0, weight_decay=0.0,
+                        warmup_steps=0, total_steps=10, min_lr_frac=1.0)
+        st = adamw_init(params, cfg)
+        g = {"w": jnp.full((8,), 1e6, jnp.float32)}
+        p2, st, m = adamw_update(params, g, st, cfg)
+        assert float(m["grad_norm"]) > 1e6
+        assert np.isfinite(np.asarray(p2["w"])).all()
+        assert float(jnp.abs(p2["w"]).max()) < 10.0
+
+
+class TestSchedule:
+    def test_warmup_then_cosine(self):
+        cfg = OptConfig(lr=1e-3, warmup_steps=100, total_steps=1000,
+                        min_lr_frac=0.1)
+        assert float(cosine_schedule(cfg, 0)) == 0.0
+        assert abs(float(cosine_schedule(cfg, 100)) - 1e-3) < 1e-9
+        assert abs(float(cosine_schedule(cfg, 1000)) - 1e-4) < 1e-9
+        assert float(cosine_schedule(cfg, 50)) == pytest.approx(5e-4)
+
+
+class TestNoDecayMask:
+    def test_norm_params_not_decayed(self):
+        params = {"mlp": {"w1": jnp.ones((4, 4))},
+                  "ln": {"scale": jnp.ones((4,))}}
+        cfg = OptConfig(lr=0.1, weight_decay=1.0, warmup_steps=0,
+                        total_steps=10, min_lr_frac=1.0)
+        st = adamw_init(params, cfg)
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        p2, _, _ = adamw_update(params, zero_g, st, cfg)
+        # decayed weight moved, norm scale untouched
+        assert float(jnp.abs(p2["mlp"]["w1"] - 1.0).max()) > 1e-3
+        np.testing.assert_allclose(np.asarray(p2["ln"]["scale"]), 1.0)
+
+
+class TestGlobalNorm:
+    def test_value(self):
+        t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+        assert float(global_norm(t)) == pytest.approx(5.0)

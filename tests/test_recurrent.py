@@ -1,0 +1,121 @@
+"""Recurrent-family numerics: the chunkwise/parallel training forms must
+equal the step-by-step recurrences they accelerate (the property that makes
+prefill-then-decode exact for the ssm/hybrid archs)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import rglru as RG
+from repro.models import xlstm as XL
+
+
+class TestMLSTM:
+    @pytest.mark.parametrize("s,chunk", [(16, 4), (17, 8), (32, 32), (7, 16)])
+    def test_chunkwise_equals_recurrent(self, rng, s, chunk):
+        b, h, dh = 2, 2, 8
+        q = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        logi = jnp.asarray(rng.normal(size=(b, h, s)), jnp.float32)
+        logf = jnp.asarray(-np.abs(rng.normal(size=(b, h, s))), jnp.float32)
+
+        got, (C, n, m) = XL._mlstm_chunk_scan(q, k, v, logi, logf, None, chunk)
+
+        # oracle: the per-token recurrence
+        state = (jnp.zeros((b, h, dh, dh)), jnp.zeros((b, h, dh)),
+                 jnp.full((b, h), -1e30))
+        outs = []
+        kk = k / np.sqrt(dh)  # recurrent step rescales internally
+        for t in range(s):
+            o, state = XL.mlstm_recurrent_step(
+                q[:, :, t], k[:, :, t], v[:, :, t],
+                logi[:, :, t], logf[:, :, t], state)
+            outs.append(o)
+        want = jnp.stack(outs, axis=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=2e-4, rtol=2e-4)
+        np.testing.assert_allclose(np.asarray(m), np.asarray(state[2]),
+                                   atol=1e-5)
+
+    def test_carried_state_across_chunks(self, rng):
+        """Splitting a sequence into two chunkwise calls with carried state
+        == one call (prefill continuation)."""
+        b, h, s, dh = 1, 2, 24, 8
+        q = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(b, h, s, dh)), jnp.float32)
+        logi = jnp.asarray(rng.normal(size=(b, h, s)), jnp.float32)
+        logf = jnp.asarray(-np.abs(rng.normal(size=(b, h, s))), jnp.float32)
+        full, _ = XL._mlstm_chunk_scan(q, k, v, logi, logf, None, 8)
+        h1, st = XL._mlstm_chunk_scan(q[:, :, :16], k[:, :, :16],
+                                      v[:, :, :16], logi[:, :, :16],
+                                      logf[:, :, :16], None, 8)
+        h2, _ = XL._mlstm_chunk_scan(q[:, :, 16:], k[:, :, 16:],
+                                     v[:, :, 16:], logi[:, :, 16:],
+                                     logf[:, :, 16:], st, 8)
+        got = jnp.concatenate([h1, h2], axis=2)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=2e-4, rtol=2e-4)
+
+
+class TestRGLRU:
+    def test_scan_equals_steps(self, rng):
+        b, s, w = 2, 12, 16
+        x = jnp.asarray(rng.normal(size=(b, s, w)), jnp.float32)
+        r = jnp.asarray(rng.random((b, s, w)), jnp.float32)
+        i = jnp.asarray(rng.random((b, s, w)), jnp.float32)
+        lam = jnp.asarray(rng.normal(size=(w,)), jnp.float32)
+        got = RG._rglru_scan(x, r, i, lam)
+        hstate = jnp.zeros((b, w))
+        outs = []
+        for t in range(s):
+            hstate = RG.rglru_step(x[:, t], r[:, t], i[:, t], lam, hstate)
+            outs.append(hstate)
+        want = jnp.stack(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_carried_h0(self, rng):
+        b, s, w = 1, 10, 8
+        x = jnp.asarray(rng.normal(size=(b, s, w)), jnp.float32)
+        r = jnp.asarray(rng.random((b, s, w)), jnp.float32)
+        i = jnp.asarray(rng.random((b, s, w)), jnp.float32)
+        lam = jnp.asarray(rng.normal(size=(w,)), jnp.float32)
+        full = RG._rglru_scan(x, r, i, lam)
+        h1 = RG._rglru_scan(x[:, :5], r[:, :5], i[:, :5], lam)
+        h2 = RG._rglru_scan(x[:, 5:], r[:, 5:], i[:, 5:], lam, h0=h1[:, -1])
+        got = jnp.concatenate([h1, h2], axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-5, rtol=1e-5)
+
+    def test_stability_long_sequence(self, rng):
+        """|a| < 1 ⇒ no blowup over long sequences (long_500k viability)."""
+        b, s, w = 1, 2048, 4
+        x = jnp.asarray(rng.normal(size=(b, s, w)), jnp.float32)
+        r = jnp.ones((b, s, w), jnp.float32)
+        i = jnp.ones((b, s, w), jnp.float32) * 0.5
+        lam = jnp.zeros((w,), jnp.float32)
+        out = RG._rglru_scan(x, r, i, lam)
+        assert np.isfinite(np.asarray(out)).all()
+        assert float(jnp.abs(out).max()) < 100.0
+
+
+class TestSLSTM:
+    def test_scan_matches_manual_steps(self, rng):
+        cfg = configs.get("xlstm_350m", smoke=True)
+        params = XL.init_slstm(jax.random.PRNGKey(0), cfg, jnp.float32)
+        b, s = 1, 6
+        x = jnp.asarray(rng.normal(size=(b, s, cfg.d_model)), jnp.float32)
+        full, _ = XL.apply_slstm(params, x, cfg)
+        state = None
+        outs = []
+        for t in range(s):
+            o, state = XL.apply_slstm(params, x[:, t:t + 1], cfg,
+                                      state=state, decode=True)
+            outs.append(o)
+        got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=2e-4, rtol=2e-4)

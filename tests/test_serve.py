@@ -1,0 +1,129 @@
+"""Serving engine: prefill+decode correctness across families, task switch."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serve import ServeConfig, ServingEngine
+
+
+@pytest.mark.parametrize("arch", ["llama3_2_1b", "xlstm_350m",
+                                  "recurrentgemma_9b", "kimi_k2_1t_a32b",
+                                  "musicgen_large"])
+def test_generate_all_families(arch):
+    cfg = configs.get(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=64))
+    if cfg.embed_input == "tokens":
+        prompts = jax.random.randint(jax.random.PRNGKey(2), (2, 8), 0,
+                                     cfg.vocab_size)
+    else:
+        prompts = jax.random.normal(jax.random.PRNGKey(2),
+                                    (2, 8, cfg.d_model),
+                                    dtype=cfg.activation_dtype)
+    out = eng.generate(prompts, 6)
+    assert out.shape == (2, 6)
+    assert (out >= 0).all() and (out < cfg.vocab_size).all()
+
+
+def test_decode_matches_teacher_forcing():
+    """Greedy decode logits == full-sequence forward logits at each step:
+    the KV-cache incremental path is exact."""
+    cfg = configs.get("llama3_2_1b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s0, n = 2, 6, 4
+    prompts = jax.random.randint(jax.random.PRNGKey(3), (b, s0), 0,
+                                 cfg.vocab_size)
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    out = eng.generate(prompts, n)
+
+    # teacher forcing: run the growing sequence through the full forward
+    seq = np.asarray(prompts)
+    for i in range(n):
+        logits, _, _ = M.forward(params, jnp.asarray(seq), cfg)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        assert (nxt == out[:, i]).all(), f"divergence at step {i}"
+        seq = np.concatenate([seq, nxt[:, None]], axis=1)
+
+
+def test_recurrent_decode_matches_teacher_forcing():
+    """Same exactness for the recurrent (state-carrying) family."""
+    cfg = configs.get("recurrentgemma_9b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    b, s0, n = 1, 5, 3
+    prompts = jax.random.randint(jax.random.PRNGKey(4), (b, s0), 0,
+                                 cfg.vocab_size)
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    out = eng.generate(prompts, n)
+    seq = np.asarray(prompts)
+    for i in range(n):
+        logits, _, _ = M.forward(params, jnp.asarray(seq), cfg)
+        nxt = np.asarray(jnp.argmax(logits[:, -1], -1))
+        assert (nxt == out[:, i]).all(), f"divergence at step {i}"
+        seq = np.concatenate([seq, nxt[:, None]], axis=1)
+
+
+def test_eos_short_circuit():
+    cfg = configs.get("llama3_2_1b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(5), (2, 4), 0,
+                                 cfg.vocab_size)
+    # find what the model greedily emits first, then declare it EOS
+    eng0 = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    first = eng0.generate(prompts, 1)[:, 0]
+    eng = ServingEngine(cfg, params,
+                        ServeConfig(max_len=32, eos_id=int(first[0])))
+    out = eng.generate(prompts, 5)
+    assert out[0, 0] == int(first[0])
+
+
+def test_multitask_task_switch():
+    """§IV-F: the same engine serves different tasks; gate index switch
+    changes routing (different outputs), no re-init."""
+    cfg = configs.get("kimi_k2_1t_a32b", smoke=True)
+    from dataclasses import replace
+
+    from repro.configs.base import MoESpec
+
+    cfg = replace(cfg, moe=replace(cfg.moe, num_tasks=2))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(6), (1, 6), 0,
+                                 cfg.vocab_size)
+    eng = ServingEngine(cfg, params, ServeConfig(max_len=32))
+    out0 = eng.generate(prompts, 4, task_id=0)
+    out1 = eng.generate(prompts, 4, task_id=1)
+    assert out0.shape == out1.shape == (1, 4)
+    # both valid; routing differs (outputs usually differ, but at minimum
+    # the engine produced both without recompiling the model params)
+    assert len(eng._steps) == 2
+
+
+def test_chunked_prefill_matches_single_shot():
+    """Chunked prefill (4 chunks of 8) == one-shot prefill: same greedy
+    continuation.  The chunk offset is traced — one compile for all."""
+    cfg = configs.get("llama3_2_1b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 32), 0,
+                                 cfg.vocab_size)
+    one = ServingEngine(cfg, params, ServeConfig(max_len=64))
+    chk = ServingEngine(cfg, params, ServeConfig(max_len=64,
+                                                 prefill_chunk=8))
+    out1 = one.generate(prompts, 6)
+    out2 = chk.generate(prompts, 6)
+    np.testing.assert_array_equal(out1, out2)
+
+
+def test_chunked_prefill_recurrent_family():
+    """Chunked prefill carries recurrent state correctly (xLSTM)."""
+    cfg = configs.get("xlstm_350m", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (1, 16), 0,
+                                 cfg.vocab_size)
+    one = ServingEngine(cfg, params, ServeConfig(max_len=64))
+    chk = ServingEngine(cfg, params, ServeConfig(max_len=64,
+                                                 prefill_chunk=4))
+    np.testing.assert_array_equal(one.generate(prompts, 4),
+                                  chk.generate(prompts, 4))

@@ -1,0 +1,108 @@
+"""Sharding rules: spec trimming, alternatives, param-pattern matching,
+opt-state derivation.  Runs on a 1-device (1,1) mesh — rule logic is
+device-count independent; the 512-way layouts are exercised by dryrun."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import (
+    ShardingRules, _trim_spec, batch_sharding, constrain,
+    opt_state_shardings, param_sharding_rules, use_rules)
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+class TestTrimSpec:
+    def test_non_divisible_dropped(self, mesh):
+        # both axes size 1 always divide; build a fake check via shape 0?
+        spec = _trim_spec((4, 6), P("data", "model"), mesh)
+        assert spec == P("data", "model")
+
+    def test_pad_left_for_scanned(self, mesh):
+        spec = _trim_spec((3, 4, 6), P("data", "model"), mesh, pad_left=True)
+        assert spec == P(None, "data", "model")
+
+    def test_pad_right_default(self, mesh):
+        spec = _trim_spec((4, 6, 3), P("data", "model"), mesh)
+        assert spec == P("data", "model", None)
+
+
+class TestParamPatterns:
+    def test_model_tree_coverage(self, mesh):
+        """Every parameter of a real model matches a pattern and returns a
+        NamedSharding (nothing falls through to an error)."""
+        from repro import configs
+        from repro.models import model as M
+
+        rules = ShardingRules.for_mesh(mesh)
+        for arch in ("llama3_2_1b", "kimi_k2_1t_a32b", "xlstm_350m",
+                     "recurrentgemma_9b"):
+            cfg = configs.get(arch, smoke=True)
+            shapes = jax.eval_shape(
+                lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c))
+            sh = param_sharding_rules(shapes, rules)
+            for leaf in jax.tree.leaves(
+                    sh, is_leaf=lambda x: isinstance(x, jax.sharding.NamedSharding)):
+                assert isinstance(leaf, jax.sharding.NamedSharding)
+
+    def test_attention_patterns(self, mesh):
+        rules = ShardingRules.for_mesh(mesh)
+        tree = {"layers": {"b0": {"attn": {"wq": jnp.zeros((8, 16))}}}}
+        sh = param_sharding_rules(tree, rules)
+        assert sh["layers"]["b0"]["attn"]["wq"].spec == P("data", "model")
+
+
+class TestConstrain:
+    def test_noop_without_rules(self):
+        x = jnp.ones((4, 4))
+        assert constrain(x, "btd") is x
+
+    def test_applies_with_rules(self, mesh):
+        rules = ShardingRules.for_mesh(mesh)
+        with use_rules(rules):
+            x = constrain(jnp.ones((4, 8, 6)), "btd")
+        assert x.shape == (4, 8, 6)
+
+    def test_unknown_name_noop(self, mesh):
+        rules = ShardingRules.for_mesh(mesh)
+        with use_rules(rules):
+            x = jnp.ones((3,))
+            assert constrain(x, "no_such_rule") is x
+
+    def test_alternative_specs(self, mesh):
+        """'cache' rule: list of alternatives, first divisible wins."""
+        rules = ShardingRules.for_mesh(mesh)
+        with use_rules(rules):
+            y = constrain(jnp.ones((2, 4, 8, 16)), "cache")
+        assert y.shape == (2, 4, 8, 16)
+
+
+class TestBatchAndOptShardings:
+    def test_batch_tree(self, mesh):
+        rules = ShardingRules.for_mesh(mesh)
+        tree = {"inputs": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+                "idx": jax.ShapeDtypeStruct((), jnp.int32)}
+        sh = batch_sharding(tree, rules)
+        assert sh["inputs"].spec[0] in ("data", ("data",))
+        assert sh["idx"].spec == P()
+
+    def test_opt_state_follows_params(self, mesh):
+        from repro.optim import OptConfig, adamw_init
+
+        rules = ShardingRules.for_mesh(mesh)
+        params = {"mlp": {"w1": jnp.zeros((256, 512), jnp.float32)}}
+        cfg = OptConfig(factored=True, factored_min_size=128)
+        opt_shapes = jax.eval_shape(lambda: adamw_init(params, cfg))
+        sh = opt_state_shardings(opt_shapes, params, rules)
+        ema = sh["ema"]["mlp"]["w1"]
+        assert ema["m"].spec == P("data", "model")
+        assert ema["vr"].spec == P("data")          # row stats drop last dim
+        assert ema["vc"].spec == P("model")         # col stats drop -2 dim
+        assert sh["step"].spec == P()

@@ -1,0 +1,163 @@
+"""Fault-tolerant training loop: convergence, restart replay, NaN guard,
+straggler hook, gradient accumulation."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.data import DataConfig, make_stream
+from repro.models import model as M
+from repro.optim import OptConfig, adamw_init
+from repro.train import LoopConfig, TrainConfig, TrainLoop, make_train_step
+
+
+def build(tmp_path=None, total=20, seed=0, arch="llama3_2_1b"):
+    cfg = configs.get(arch, smoke=True)
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=3, total_steps=60))
+    opt_state = adamw_init(params, tcfg.opt)
+    step = make_train_step(cfg, tcfg)
+    stream = make_stream(DataConfig(batch=4, seq_len=32,
+                                    vocab_size=cfg.vocab_size, seed=0))
+    loop = TrainLoop(
+        LoopConfig(total_steps=total,
+                   ckpt_dir=str(tmp_path) if tmp_path else None,
+                   ckpt_every=10, log_every=1000),
+        step, stream, params, opt_state, log=lambda s: None)
+    return loop
+
+
+class TestConvergence:
+    def test_loss_decreases(self):
+        loop = build(total=25)
+        st = loop.run()
+        first = np.mean([l for _, l in st.history[:5]])
+        last = np.mean([l for _, l in st.history[-5:]])
+        assert last < first
+
+
+class TestRestartReplay:
+    def test_resume_is_bit_identical(self, tmp_path):
+        """Crash at step 10, restore, continue to 20 == uninterrupted run
+        (counted seedable stream + checkpointed state ⇒ exact replay)."""
+        a = build(tmp_path / "a", total=20)
+        st_a = a.run()
+
+        b1 = build(tmp_path / "b", total=10)
+        b1.run()                                  # "crash" after step 10
+        b2 = build(tmp_path / "b", total=20, seed=99)  # junk init params
+        assert b2.try_restore()
+        assert b2.state.step == 10
+        st_b = b2.run()
+
+        tail_a = dict(st_a.history[10:])
+        tail_b = dict(st_b.history)
+        assert set(tail_b) == set(tail_a)
+        for s in tail_b:
+            assert tail_b[s] == pytest.approx(tail_a[s], rel=1e-6), s
+
+
+class TestNaNGuard:
+    def test_nan_update_skipped_in_step(self):
+        """The guard lives INSIDE the jitted step (donated buffers can't be
+        reused from the host): a poisoned batch leaves params bit-identical
+        and the loop counts the skip."""
+        cfg = configs.get("llama3_2_1b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=3,
+                                         total_steps=60))
+        opt_state = adamw_init(params, tcfg.opt)
+
+        def poisoned_loss(p, mb):
+            loss, aux = M.lm_loss(p, mb, cfg)
+            bad = (mb["inputs"][0, 0] == -1)       # poison marker
+            return jnp.where(bad, jnp.float32(np.nan), loss), aux
+
+        step = make_train_step(cfg, tcfg, loss_fn=poisoned_loss,
+                               donate=False)
+        stream = make_stream(DataConfig(batch=4, seq_len=16,
+                                        vocab_size=cfg.vocab_size, seed=0))
+        batch = {k: jnp.asarray(v) for k, v in stream.batch(0).items()}
+        bad_batch = dict(batch, inputs=batch["inputs"].at[0, 0].set(-1))
+
+        p2, o2, m2 = step(params, opt_state, bad_batch)
+        assert not np.isfinite(float(m2["loss"]))
+        assert int(m2["skipped"]) == 1
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+        p3, o3, m3 = step(params, opt_state, batch)   # clean batch updates
+        assert int(m3["skipped"]) == 0
+        deltas = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            params, p3)
+        assert max(jax.tree.leaves(deltas)) > 0
+
+    def test_loop_counts_skips(self):
+        loop = build(total=4)
+        real_step = loop.train_step
+        calls = {"n": 0}
+
+        def poisoned(params, opt_state, batch):
+            p, o, m = real_step(params, opt_state, batch)
+            calls["n"] += 1
+            if calls["n"] == 2:
+                m = dict(m, loss=jnp.float32(np.nan),
+                         skipped=jnp.int32(1))
+            return p, o, m
+
+        loop.train_step = poisoned
+        st = loop.run()
+        assert st.nan_skip_count == 1
+        assert len(st.history) == 3               # poisoned step not recorded
+
+
+class TestStragglerDetection:
+    def test_slow_step_triggers_hook(self, monkeypatch):
+        loop = build(total=16)
+        events = []
+        loop.on_straggler = lambda step, dt: events.append(step)
+        real_step = loop.train_step
+        calls = {"n": 0}
+
+        import time
+
+        def slow(params, opt_state, batch):
+            calls["n"] += 1
+            out = real_step(params, opt_state, batch)
+            jax.block_until_ready(out[2]["loss"])
+            if calls["n"] == 14:
+                time.sleep(max(0.3, loop.state.ema_step_time * 5))
+            return out
+
+        loop.train_step = slow
+        st = loop.run()
+        assert st.straggler_count >= 1
+        assert 13 in events
+
+
+class TestGradAccum:
+    def test_accum_equals_single(self):
+        cfg = configs.get("llama3_2_1b", smoke=True)
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        ocfg = OptConfig(lr=1e-3, warmup_steps=3, total_steps=60)
+        opt_state = adamw_init(params, ocfg)
+        stream = make_stream(DataConfig(batch=8, seq_len=16,
+                                        vocab_size=cfg.vocab_size, seed=0))
+        batch = stream.batch(0)
+        s1 = make_train_step(cfg, TrainConfig(opt=ocfg, accum_steps=1),
+                             donate=False)
+        s4 = make_train_step(cfg, TrainConfig(opt=ocfg, accum_steps=4),
+                             donate=False)
+        p1, _, m1 = s1(params, opt_state, batch)
+        p4, _, m4 = s4(params, opt_state, batch)
+        assert float(m1["loss"]) == pytest.approx(float(m4["loss"]), rel=1e-5)
+        deltas = jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            p1, p4)
+        assert max(jax.tree.leaves(deltas)) < 2e-3   # bf16 param grid
