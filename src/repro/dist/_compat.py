@@ -1,0 +1,32 @@
+"""jax version compatibility for the distribution layer.
+
+The repo targets the modern ``jax.shard_map`` entry point (whose
+replication-check kwarg is ``check_vma``); older jax releases only ship
+``jax.experimental.shard_map.shard_map`` (kwarg ``check_rep``).  Call
+sites — ``core/moe.py``'s expert-parallel path, ``dist/compress.py``'s
+collectives, and the test suite — all use the modern spelling, so on an
+old jax we install a forwarding wrapper once at import time.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["install_shard_map"]
+
+
+def install_shard_map() -> None:
+    """Make ``jax.shard_map(..., check_vma=...)`` work on any jax."""
+    if hasattr(jax, "shard_map"):
+        return  # modern jax: native entry point already accepts check_vma
+
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  check_vma=None, check_rep=None, **kwargs):
+        if check_rep is None:
+            check_rep = True if check_vma is None else check_vma
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep, **kwargs)
+
+    jax.shard_map = shard_map

@@ -1,0 +1,90 @@
+"""Minimal stand-in for the slice of the `hypothesis` API this suite uses.
+
+The container image does not ship `hypothesis` and the repo rules forbid
+installing new packages, so `tests/conftest.py` registers this module as
+``sys.modules["hypothesis"]`` ONLY when the real package is absent.  It
+implements just what the tests import — ``given``, ``settings`` and the
+``floats`` / ``integers`` / ``lists`` strategies — as a deterministic
+random-example harness: each ``@given`` test runs ``max_examples`` times
+with values drawn from a per-test seeded RNG (edge values included with
+elevated probability).  No shrinking, no database — if an example fails,
+the raw values are in the assertion traceback.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+
+__all__ = ["given", "settings", "strategies"]
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rnd: random.Random):
+        return self._draw(rnd)
+
+
+class strategies:
+    @staticmethod
+    def floats(min_value=-1e6, max_value=1e6, **_kw):
+        edges = (float(min_value), float(max_value), 0.0)
+
+        def draw(rnd):
+            if rnd.random() < 0.15:
+                return min(max(rnd.choice(edges), min_value), max_value)
+            return rnd.uniform(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value, max_value):
+        def draw(rnd):
+            if rnd.random() < 0.15:
+                return rnd.choice((min_value, max_value))
+            return rnd.randint(min_value, max_value)
+
+        return _Strategy(draw)
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rnd):
+            return [elements.example(rnd)
+                    for _ in range(rnd.randint(min_size, max_size))]
+
+        return _Strategy(draw)
+
+
+def settings(max_examples=20, deadline=None, **_kw):
+    def deco(fn):
+        fn._stub_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(*strats):
+    """Positional strategies bind to the test's trailing parameters (the
+    same convention real hypothesis uses)."""
+
+    def deco(fn):
+        sig = inspect.signature(fn)
+        params = list(sig.parameters.values())
+        keep = params[:len(params) - len(strats)]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_stub_max_examples", 20)
+            rnd = random.Random(f"{fn.__module__}.{fn.__qualname__}")
+            for _ in range(n):
+                fn(*args, *[s.example(rnd) for s in strats], **kwargs)
+
+        # pytest must see the signature WITHOUT the strategy-bound params,
+        # or it would try to inject them as fixtures
+        wrapper.__signature__ = sig.replace(parameters=keep)
+        return wrapper
+
+    return deco

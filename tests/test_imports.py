@@ -1,0 +1,28 @@
+"""Collection smoke test: import every module under src/repro/ so a
+missing-module regression fails as ONE named test per module instead of
+a dozen opaque collection errors (the seed's failure mode when
+``repro.dist`` was absent)."""
+
+import importlib
+import os
+import pkgutil
+
+import pytest
+
+import repro
+
+
+def _module_names():
+    root = os.path.dirname(repro.__file__)
+    names = ["repro"]
+    for mod in pkgutil.walk_packages([root], prefix="repro."):
+        names.append(mod.name)
+    return sorted(names)
+
+
+@pytest.mark.parametrize("name", _module_names())
+def test_import(name, monkeypatch):
+    # launch/dryrun mutates XLA_FLAGS at import for its own subprocess
+    # use; pin the var so the import can't leak it into this session
+    monkeypatch.setenv("XLA_FLAGS", os.environ.get("XLA_FLAGS", ""))
+    importlib.import_module(name)

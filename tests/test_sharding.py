@@ -4,18 +4,11 @@ device-count independent; the 512-way layouts are exercised by dryrun."""
 
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.dist.sharding import (
     ShardingRules, _trim_spec, batch_sharding, constrain,
     opt_state_shardings, param_sharding_rules, use_rules)
-
-
-@pytest.fixture(scope="module")
-def mesh():
-    return jax.make_mesh((1, 1), ("data", "model"))
 
 
 class TestTrimSpec:
