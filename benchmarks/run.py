@@ -17,7 +17,7 @@ import traceback
 from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
-           "table5_ablation", "fig12_breakdown"]
+           "table5_ablation", "fig12_breakdown", "serve_throughput"]
 
 
 def main() -> int:

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from repro.core import routing as R
 from repro.core.unified_linear import unified_linear
 
-__all__ = ["MoEConfig", "init_moe", "apply_moe"]
+__all__ = ["MoEConfig", "init_moe", "apply_moe", "group_shape",
+           "expert_param_names"]
 
 
 @dataclass(frozen=True)
@@ -86,6 +87,26 @@ def init_moe(key, cfg: MoEConfig, dtype=jnp.bfloat16) -> dict[str, Any]:
     return p
 
 
+def group_shape(t_total: int, group_size: int) -> tuple[int, int]:
+    """(group length g, padded token count) for routing ``t_total`` tokens.
+
+    Groups are ``min(group_size, t_total)`` long and the token stream is
+    padded up to the next multiple of g — NOT trimmed down to a divisor
+    (the old ``while t % g: g -= 1`` degenerated to g=1, i.e. one routing
+    group per token, for prime token counts).
+    """
+    g = max(1, min(group_size, t_total))
+    return g, -(-t_total // g) * g
+
+
+def expert_param_names(cfg: MoEConfig) -> tuple[str, ...]:
+    """Names of the per-expert (leading E axis) weight tensors — the set the
+    serving layer pages between host and device."""
+    if cfg.expert_kind == "swiglu":
+        return ("wg", "wu", "wd")
+    return ("w1", "b1", "w2", "b2")
+
+
 def _expert_ffn(params, cfg: MoEConfig, buf: jax.Array,
                 group_sizes: jax.Array | None = None) -> jax.Array:
     """Apply every expert's MLP to its buffer: (E, C, d) -> (E, C, d).
@@ -119,15 +140,31 @@ def _expert_ffn(params, cfg: MoEConfig, buf: jax.Array,
     return (o + params["b2"][:, None, :]).astype(buf.dtype)
 
 
-def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0):
+def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0,
+              return_stats: bool = False):
     """x: (..., T, d) -> (y, aux_loss).  Routes per group of ``group_size``.
 
     Tokens are reshaped into independent routing groups (GShard convention) so
     capacity is a local property — this is also what makes the dispatch
-    shardable over the data axis at pod scale.
+    shardable over the data axis at pod scale.  Token counts that do not
+    divide the group size are zero-padded up to the next multiple (padding
+    rows route like any token but their outputs are sliced off).
+
+    ``return_stats=True`` additionally returns the per-expert dispatch counts
+    int32 summed over groups — the router-usage statistic the serving
+    layer's expert cache consumes (the software analogue of Edge-MoE's DDR
+    expert-streaming telemetry).  Shape (E,), or (num_tasks, E) for
+    per-token tasks (below).
+
+    ``task_id`` may be a scalar (the whole call shares one gating network —
+    the paper's pointer switch) or a 1-D vector of per-sequence task ids
+    matching x's leading dim (continuous batching serves a *mixed-task*
+    batch: each token is gated by its own task's network — the per-slot
+    generalization of the zero-cost task switch).
 
     ``impl="ep_local"`` (requires an active mesh with a ``model`` axis)
-    switches to the explicit expert-parallel schedule below.
+    switches to the explicit expert-parallel schedule below; it supports
+    scalar tasks only.
     """
     if cfg.impl == "ep_local":
         from repro.dist.sharding import current_rules
@@ -135,31 +172,78 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0):
         rules = current_rules()
         if rules is not None and rules.mesh is not None \
                 and "model" in rules.mesh.axis_names:
-            return apply_moe_ep_local(params, cfg, x, rules.mesh,
-                                      task_id=task_id)
+            out = apply_moe_ep_local(params, cfg, x, rules.mesh,
+                                     task_id=task_id)
+            if return_stats:  # ep_local keeps counts shard-local; not exported
+                return out + (jnp.zeros((cfg.num_experts,), jnp.int32),)
+            return out
         cfg = replace_impl(cfg, "grouped")   # no mesh: single-device fallback
     orig_shape = x.shape
     d = x.shape[-1]
     flat = x.reshape(-1, d)
     t_total = flat.shape[0]
-    g = max(1, min(cfg.group_size, t_total))
-    while t_total % g:
-        g -= 1
-    groups = flat.reshape(t_total // g, g, d)
+    g, t_pad = group_shape(t_total, cfg.group_size)
+    real_groups = None   # pad-row mask: pads are excluded from aux + stats
+    if t_pad != t_total:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((t_pad - t_total, d), flat.dtype)])
+        real_groups = (jnp.arange(t_pad) < t_total).reshape(t_pad // g, g)
+    groups = flat.reshape(t_pad // g, g, d)
     capacity = cfg.capacity(g)
 
+    task_vec = None
+    if not isinstance(task_id, int) and jnp.ndim(task_id) == 1:
+        # per-token gating: expand (B,) sequence tasks to (T,) token tasks
+        tv = jnp.asarray(task_id, jnp.int32)
+        task_vec = jnp.repeat(tv, t_total // tv.shape[0])
+        if t_pad != t_total:
+            task_vec = jnp.concatenate(
+                [task_vec, jnp.zeros((t_pad - t_total,), jnp.int32)])
+        task_groups = task_vec.reshape(t_pad // g, g)
+
     gate_w = params["gate"]
-    if gate_w.ndim == 3:  # (tasks, d, E) — select the active task's gate
+    if gate_w.ndim == 3 and task_vec is None:
+        # (tasks, d, E) — select the active task's gate (§IV-F pointer)
         gate_w = jax.lax.dynamic_index_in_dim(
             gate_w, jnp.asarray(task_id, jnp.int32), axis=0, keepdims=False)
+    # optional per-task gate logit bias (tasks, E) — not created by init_moe;
+    # injected by routing-control tools (task-level sparsity shaping, aux-
+    # free balancing).  Absent => bit-identical to the unbiased gate.
+    gate_b = params.get("gate_bias")
+    if gate_b is not None and gate_b.ndim == 2 and task_vec is None:
+        gate_b = jax.lax.dynamic_index_in_dim(
+            gate_b, jnp.asarray(task_id, jnp.int32), axis=0, keepdims=False)
+    n_stat_tasks = gate_w.shape[0] if gate_w.ndim == 3 else 1
 
-    def per_group(xg):
+    def per_group(xg, tg, real):
         with jax.named_scope("moe_gate"):
-            logits = jnp.einsum("td,de->te", xg.astype(jnp.float32), gate_w)
+            if tg is None:
+                logits = jnp.einsum("td,de->te", xg.astype(jnp.float32),
+                                    gate_w)
+                if gate_b is not None:
+                    logits = logits + gate_b.astype(jnp.float32)
+            else:
+                # every task's gate, then select per token — K is small
+                all_logits = jnp.einsum("td,kde->kte",
+                                        xg.astype(jnp.float32), gate_w)
+                logits = all_logits[tg, jnp.arange(tg.shape[0])]
+                if gate_b is not None:
+                    logits = logits + gate_b[tg].astype(jnp.float32)
             r = R.route(logits, cfg.top_k, capacity, renormalize=cfg.renormalize)
             # per-expert queue lengths (metaqueue): experts with 0 are skipped
-            group_sizes = jnp.zeros((cfg.num_experts,), jnp.int32).at[
-                r.expert.reshape(-1)].add(r.valid.reshape(-1).astype(jnp.int32))
+            group_sizes = R.dispatch_counts(r, cfg.num_experts)
+            # padding rows (real=False) are sliced from y and excluded from
+            # stats/aux below, but still occupy dispatch capacity
+            stat_valid = r.valid if real is None else r.valid & real[:, None]
+            if tg is None:
+                stat = jnp.zeros((cfg.num_experts,), jnp.int32).at[
+                    r.expert.reshape(-1)].add(
+                        stat_valid.reshape(-1).astype(jnp.int32))
+            else:   # (tasks, E) — per-task router-usage export
+                stat = jnp.zeros((n_stat_tasks, cfg.num_experts),
+                                 jnp.int32).at[
+                    jnp.repeat(tg, cfg.top_k), r.expert.reshape(-1)].add(
+                        stat_valid.reshape(-1).astype(jnp.int32))
         with jax.named_scope("moe_dispatch"):
             if cfg.impl == "onehot":
                 buf = R.dispatch_onehot(xg, r, cfg.num_experts, capacity)
@@ -172,11 +256,23 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0):
                 y = R.combine_onehot(out, r)
             else:
                 y = R.combine(out, r)
-            aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts)
-        return y.astype(x.dtype), aux
+            aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts,
+                                      mask=real)
+        return y.astype(x.dtype), aux, stat
 
-    y, aux = jax.vmap(per_group)(groups)
-    y = y.reshape(orig_shape)
+    if task_vec is None and real_groups is None:
+        y, aux, counts = jax.vmap(
+            lambda xg: per_group(xg, None, None))(groups)
+    elif task_vec is None:
+        y, aux, counts = jax.vmap(
+            lambda xg, rm: per_group(xg, None, rm))(groups, real_groups)
+    elif real_groups is None:
+        y, aux, counts = jax.vmap(
+            lambda xg, tg: per_group(xg, tg, None))(groups, task_groups)
+    else:
+        y, aux, counts = jax.vmap(per_group)(groups, task_groups,
+                                             real_groups)
+    y = y.reshape(-1, d)[:t_total].reshape(orig_shape)
 
     if cfg.num_shared_experts:
         with jax.named_scope("moe_shared"):
@@ -185,6 +281,8 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0):
             ushared = unified_linear(x, params["shared_wu"])
             y = y + unified_linear((gshared * ushared).astype(x.dtype),
                                    params["shared_wd"])
+    if return_stats:
+        return y, aux.mean(), counts.sum(axis=0)
     return y, aux.mean()
 
 
@@ -238,15 +336,18 @@ def apply_moe_ep_local(params, cfg: MoEConfig, x: jax.Array, mesh,
         d = xg.shape[-1]
         flat = xg.reshape(-1, d)
         t = flat.shape[0]
-        g = max(1, min(cfg.group_size, t))
-        while t % g:
-            g -= 1
-        groups = flat.reshape(t // g, g, d)
+        g, t_pad = group_shape(t, cfg.group_size)
+        real = None
+        if t_pad != t:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((t_pad - t, d), flat.dtype)])
+            real = (jnp.arange(t_pad) < t).reshape(t_pad // g, g)
+        groups = flat.reshape(t_pad // g, g, d)
         capacity = cfg.capacity(g)
         shard = jax.lax.axis_index("model")
         e_lo = shard * e_local
 
-        def per_group(xg1):
+        def per_group(xg1, rm):
             with jax.named_scope("moe_gate"):
                 logits = jnp.einsum("td,de->te", xg1.astype(jnp.float32),
                                     gate_w)
@@ -260,9 +361,7 @@ def apply_moe_ep_local(params, cfg: MoEConfig, x: jax.Array, mesh,
                     expert=e_loc.astype(jnp.int32), gate=r.gate,
                     position=r.position, valid=r.valid & local,
                     probs=r.probs)
-                sizes = jnp.zeros((e_local,), jnp.int32).at[
-                    r_loc.expert.reshape(-1)].add(
-                        r_loc.valid.reshape(-1).astype(jnp.int32))
+                sizes = R.dispatch_counts(r_loc, e_local)
                 buf = R.dispatch(xg1, r_loc, e_local, capacity)
             with jax.named_scope("moe_ffn"):
                 out = _expert_ffn(params_local(ew_local), cfg, buf, sizes)
@@ -270,14 +369,18 @@ def apply_moe_ep_local(params, cfg: MoEConfig, x: jax.Array, mesh,
                 y = R.combine(out, r_loc)
                 # full combine = psum of per-shard partials over experts
                 y = jax.lax.psum(y, "model")
-                aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts)
+                aux = R.load_balance_loss(r.probs, r.expert,
+                                          cfg.num_experts, mask=rm)
             return y.astype(xg1.dtype), aux
 
-        y, aux = jax.vmap(per_group)(groups)
+        if real is None:
+            y, aux = jax.vmap(lambda xg1: per_group(xg1, None))(groups)
+        else:
+            y, aux = jax.vmap(per_group)(groups, real)
         aux = aux.mean()
         for ax in batch_axes:                 # aux is per-data-shard local
             aux = jax.lax.pmean(aux, ax)
-        return y.reshape(lead + (d,)), aux[None]
+        return y.reshape(-1, d)[:t].reshape(lead + (d,)), aux[None]
 
     def params_local(ew_local):
         return ew_local

@@ -48,6 +48,7 @@ __all__ = [
     "route_topk",
     "build_dispatch",
     "dispatch",
+    "dispatch_counts",
     "dispatch_onehot",
     "combine",
     "combine_onehot",
@@ -110,6 +111,14 @@ def route(gate_logits: jax.Array, k: int, capacity: int, *,
     position, valid = build_dispatch(expert, num_experts, capacity)
     return Routing(expert=expert, gate=gate, position=position, valid=valid,
                    probs=probs)
+
+
+def dispatch_counts(routing: Routing, num_experts: int) -> jax.Array:
+    """Per-expert queue lengths (E,) int32 — the paper's metaqueue, and the
+    router-usage statistic exported to the serving layer's expert cache."""
+    return jnp.zeros((num_experts,), jnp.int32).at[
+        routing.expert.reshape(-1)].add(
+            routing.valid.reshape(-1).astype(jnp.int32))
 
 
 def dispatch(x: jax.Array, routing: Routing, num_experts: int, capacity: int):
@@ -175,14 +184,21 @@ def combine_onehot(expert_out: jax.Array, routing: Routing) -> jax.Array:
     return jnp.einsum("tec,ecd->td", combine_mask, expert_out)
 
 
-def load_balance_loss(probs: jax.Array, expert: jax.Array, num_experts: int):
+def load_balance_loss(probs: jax.Array, expert: jax.Array, num_experts: int,
+                      mask: jax.Array | None = None):
     """Switch-style auxiliary loss: E * sum_e f_e * P_e.
 
     f_e = fraction of (token, slot) assignments routed to e; P_e = mean gate
-    probability of e.  Minimized when routing is uniform.
+    probability of e.  Minimized when routing is uniform.  ``mask`` (T,)
+    excludes tokens (e.g. group-padding rows) from both statistics; an
+    all-ones mask is bit-identical to no mask.
     """
     t, k = expert.shape
-    counts = jnp.zeros((num_experts,), jnp.float32).at[expert.reshape(-1)].add(1.0)
-    f = counts / (t * k)
-    p = probs.mean(axis=0)
+    w = jnp.ones((t,), jnp.float32) if mask is None \
+        else mask.astype(jnp.float32)
+    counts = jnp.zeros((num_experts,), jnp.float32).at[
+        expert.reshape(-1)].add(jnp.repeat(w, k))
+    denom = jnp.maximum(w.sum(), 1.0)
+    f = counts / (denom * k)
+    p = (probs * w[:, None]).sum(axis=0) / denom
     return num_experts * jnp.sum(f * p)

@@ -87,10 +87,19 @@ def apply_mrope(x, pos3, theta: float):
 
 
 def sincos_positions(seq_len: int, d: int, offset=0):
-    """Classic sinusoidal embedding (MusicGen-style), added to inputs."""
-    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    """Classic sinusoidal embedding (MusicGen-style), added to inputs.
+
+    ``offset`` may be a scalar or a (B,) vector (continuous batching: each
+    slot decodes at its own position) — returns (S, d) or (B, S, d).
+    """
+    offset = jnp.asarray(offset, jnp.float32)
+    pos = jnp.arange(seq_len, dtype=jnp.float32)
+    if offset.ndim == 1:
+        pos = pos[None, :] + offset[:, None]
+    else:
+        pos = pos + offset
     freqs = 1.0 / (10000.0 ** (jnp.arange(0, d, 2, dtype=jnp.float32) / d))
-    ang = pos[:, None] * freqs[None, :]
+    ang = pos[..., None] * freqs
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
 
 
@@ -197,13 +206,25 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
     # so ordering is irrelevant; K/V carry their absolute-position RoPE.
     ring = (cache is not None and window is not None and smax <= window)
     if cache is not None and cache_index is not None and s == 1:
-        # decode: write the new token into the cache, attend over it
-        slot = cache_index % smax if ring else cache_index
-        kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot, axis=2)
+        # decode: write the new token into the cache, attend over it.
+        # cache_index may be a scalar (static batch: all sequences at the
+        # same position) or a (B,) vector (continuous batching: each slot
+        # at its own position — admitted into freed slots mid-flight).
+        ci = jnp.asarray(cache_index)
+        slot = ci % smax if ring else ci
+        if ci.ndim == 1:
+            def _upd(c, kn, i):   # per-sequence write at its own slot
+                return jax.lax.dynamic_update_slice_in_dim(c, kn, i, axis=1)
+            kc = jax.vmap(_upd)(cache["k"], k, slot)
+            vc = jax.vmap(_upd)(cache["v"], v, slot)
+        else:
+            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
+                                                     axis=2)
+            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
+                                                     axis=2)
         kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
         new_cache = {"k": kc, "v": vc}
-        cache_len = jnp.full((b,), cache_index + 1, jnp.int32)
+        cache_len = jnp.broadcast_to(ci + 1, (b,)).astype(jnp.int32)
         if ring:
             # every live slot is within the window by construction
             o = decode_attention(q, kc, vc, jnp.minimum(cache_len, smax))

@@ -102,8 +102,13 @@ def _init_block_state(kind: str, cfg: ArchConfig, batch: int, max_len: int, dtyp
 
 
 def _apply_block(kind: str, params, x, cfg: ArchConfig, *, pos, state,
-                 cache_index, decode, task_id):
+                 cache_index, decode, task_id, counts_shape=(0,)):
+    """Returns (x, new_state, aux, counts).  ``counts`` is the per-expert
+    dispatch-count tensor — (E,) for a scalar task, (num_tasks, E) for a
+    per-sequence task vector — zeros for non-MoE blocks; ``counts_shape=
+    (0,)`` (the default) disables collection entirely."""
     aux = jnp.zeros((), jnp.float32)
+    counts = jnp.zeros(counts_shape, jnp.int32)
     if kind in ("attn_mlp", "attn_moe", "attn_local_mlp"):
         window = cfg.window if kind == "attn_local_mlp" else None
         h = L.apply_norm(params["ln1"], x, cfg)
@@ -113,26 +118,31 @@ def _apply_block(kind: str, params, x, cfg: ArchConfig, *, pos, state,
         x = constrain(x + a, "btd")
         h = L.apply_norm(params["ln2"], x, cfg)
         if kind == "attn_moe":
-            y, aux = moe_lib.apply_moe(params["moe"], moe_config(cfg), h,
-                                       task_id=task_id)
+            if counts_shape != (0,):
+                y, aux, counts = moe_lib.apply_moe(
+                    params["moe"], moe_config(cfg), h, task_id=task_id,
+                    return_stats=True)
+            else:
+                y, aux = moe_lib.apply_moe(params["moe"], moe_config(cfg), h,
+                                           task_id=task_id)
         else:
             y = L.apply_mlp(params["mlp"], h, cfg)
-        return constrain(x + y, "btd"), new_cache, aux
+        return constrain(x + y, "btd"), new_cache, aux, counts
     if kind == "mlstm":
         h = L.apply_norm(params["ln"], x, cfg)
         y, new_state = XL.apply_mlstm(params["mlstm"], h, cfg, state, decode)
-        return constrain(x + y, "btd"), new_state, aux
+        return constrain(x + y, "btd"), new_state, aux, counts
     if kind == "slstm":
         h = L.apply_norm(params["ln"], x, cfg)
         y, new_state = XL.apply_slstm(params["slstm"], h, cfg, state, decode)
-        return constrain(x + y, "btd"), new_state, aux
+        return constrain(x + y, "btd"), new_state, aux, counts
     if kind == "rglru_mlp":
         h = L.apply_norm(params["ln1"], x, cfg)
         y, new_state = RG.apply_rglru(params["rglru"], h, cfg, state, decode)
         x = constrain(x + y, "btd")
         h = L.apply_norm(params["ln2"], x, cfg)
         y = L.apply_mlp(params["mlp"], h, cfg)
-        return constrain(x + y, "btd"), new_state, aux
+        return constrain(x + y, "btd"), new_state, aux, counts
     raise ValueError(kind)
 
 
@@ -199,39 +209,59 @@ def init_state(cfg: ArchConfig, batch: int, max_len: int, dtype=None):
 
 def forward(params, inputs, cfg: ArchConfig, *, pos=None, state=None,
             cache_index=None, decode=False, task_id=0, return_state=None,
-            logits_mode: str = "all"):
+            logits_mode: str = "all", return_expert_counts: bool = False):
     """inputs: tokens (B,S) int32 or embeddings (B,S,d).
 
     Returns (logits, new_state, aux_loss).  ``new_state`` is None unless a
     state was passed (prefill/decode) or ``return_state`` forces it.
     ``logits_mode="last"`` applies the LM head to the final position only
     (prefill: avoids materializing (B, S, V) logits nobody reads).
+
+    ``cache_index`` may be a scalar or a (B,) vector — the vector form is
+    the continuous-batching decode, where each batch slot sits at its own
+    sequence position.
+
+    ``return_expert_counts=True`` appends the per-expert dispatch counts
+    (num_experts,) int32, summed over all MoE layers, to the return tuple —
+    the router-usage signal consumed by the serving layer's expert cache.
     """
     x = L.embed_inputs(params["embed"], inputs, cfg)
     b, s = x.shape[0], x.shape[1]
     if pos is None:
         offset = cache_index if cache_index is not None else 0
-        pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+        off = jnp.asarray(offset, jnp.int32)
+        pos = jnp.arange(s, dtype=jnp.int32)[None, :] + (
+            off[:, None] if off.ndim == 1 else off)
         pos = jnp.broadcast_to(pos, (b, s))
     x = L.position_encode(x, cfg, offset=0 if cache_index is None else cache_index)
 
     want_state = state is not None if return_state is None else return_state
     n_scan = cfg.num_layers // cfg.period
+    counts_shape = (0,)
+    if return_expert_counts and cfg.moe is not None:
+        mc = moe_config(cfg)
+        task_vec = not isinstance(task_id, int) and jnp.ndim(task_id) == 1
+        counts_shape = ((mc.num_tasks, mc.num_experts) if task_vec
+                        else (mc.num_experts,))
     aux_total = jnp.zeros((), jnp.float32)
+    counts_total = jnp.zeros(counts_shape, jnp.int32)
 
     def super_block(x, period_params, period_state):
         aux_sum = jnp.zeros((), jnp.float32)
+        counts_sum = jnp.zeros(counts_shape, jnp.int32)
         new_states = {}
         for i in range(cfg.period):
             kind = cfg.block_pattern[i]
             st = period_state.get(f"b{i}") if period_state else None
-            x, new_st, aux = _apply_block(
+            x, new_st, aux, cnt = _apply_block(
                 kind, period_params[f"b{i}"], x, cfg, pos=pos, state=st,
-                cache_index=cache_index, decode=decode, task_id=task_id)
+                cache_index=cache_index, decode=decode, task_id=task_id,
+                counts_shape=counts_shape)
             if want_state:
                 new_states[f"b{i}"] = new_st
             aux_sum = aux_sum + aux
-        return x, new_states, aux_sum
+            counts_sum = counts_sum + cnt
+        return x, new_states, aux_sum, counts_sum
 
     if cfg.remat:
         super_block = jax.checkpoint(super_block)
@@ -240,35 +270,41 @@ def forward(params, inputs, cfg: ArchConfig, *, pos=None, state=None,
     if n_scan:
         if want_state and state is not None:
             def body(carry, xs):
-                x, aux = carry
+                x, aux, cnt = carry
                 pparams, pstate = xs
-                x, nstate, a = super_block(x, pparams, pstate)
-                return (x, aux + a), nstate
+                x, nstate, a, c = super_block(x, pparams, pstate)
+                return (x, aux + a, cnt + c), nstate
 
-            (x, aux_total), scanned_states = jax.lax.scan(
-                body, (x, aux_total), (params["layers"], state["layers"]))
+            (x, aux_total, counts_total), scanned_states = jax.lax.scan(
+                body, (x, aux_total, counts_total),
+                (params["layers"], state["layers"]))
             new_state["layers"] = scanned_states
         else:
             def body(carry, pparams):
-                x, aux = carry
-                x, _, a = super_block(x, pparams, None)
-                return (x, aux + a), None
+                x, aux, cnt = carry
+                x, _, a, c = super_block(x, pparams, None)
+                return (x, aux + a, cnt + c), None
 
-            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total),
-                                             params["layers"])
+            (x, aux_total, counts_total), _ = jax.lax.scan(
+                body, (x, aux_total, counts_total), params["layers"])
 
     for i, bparams in enumerate(params.get("rest", [])):
         kind = cfg.block_pattern[i % cfg.period]
         st = state["rest"][i] if (state is not None and "rest" in state) else None
-        x, nst, a = _apply_block(kind, bparams, x, cfg, pos=pos, state=st,
-                                 cache_index=cache_index, decode=decode,
-                                 task_id=task_id)
+        x, nst, a, c = _apply_block(kind, bparams, x, cfg, pos=pos, state=st,
+                                    cache_index=cache_index, decode=decode,
+                                    task_id=task_id,
+                                    counts_shape=counts_shape)
         if want_state:
             new_state.setdefault("rest", []).append(nst)
         aux_total = aux_total + a
+        counts_total = counts_total + c
 
     x = L.apply_norm(params["final_norm"], x, cfg)
     if logits_mode == "last":
         x = x[:, -1:]
     logits = L.apply_lm_head(params["head"], params["embed"], x, cfg)
-    return logits, (new_state if want_state else None), aux_total
+    out_state = new_state if want_state else None
+    if return_expert_counts:
+        return logits, out_state, aux_total, counts_total
+    return logits, out_state, aux_total

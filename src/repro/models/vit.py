@@ -22,7 +22,8 @@ from repro.configs.base import ArchConfig
 from repro.core.unified_linear import unified_linear
 from repro.models import transformer as T
 
-__all__ = ["init_params", "forward", "multitask_loss", "patchify"]
+__all__ = ["init_params", "forward", "multitask_loss", "patchify",
+           "embed_patches", "apply_head"]
 
 
 def patchify(images):
@@ -56,22 +57,20 @@ def init_params(key, cfg: ArchConfig, dtype=None, num_seg_classes=M.NUM_SEG_CLAS
     return params
 
 
-def forward(params, images, cfg: ArchConfig, task: str = "semseg",
-            num_seg_classes=M.NUM_SEG_CLASSES):
-    """images: (B, H, W, 3) f32 or precomputed patch embeddings (B, T, d).
-
-    Returns (prediction, aux_loss).  semseg: (B, H, W, classes) logits;
-    depth: (B, H, W).
-    """
-    task_id = M.TASKS.index(task)
+def embed_patches(params, images, cfg: ArchConfig):
+    """(B, H, W, 3) images or precomputed (B, T, d) embeddings -> (B, T, d)
+    trunk inputs (patchify → linear patch embed → learned positions)."""
     if images.ndim == 4:
         tokens = patchify(images).astype(cfg.activation_dtype)
         x = unified_linear(tokens, params["patch"]["w"], params["patch"]["b"])
-        x = x + params["patch"]["pos"]
-    else:
-        x = images.astype(cfg.activation_dtype)
-    feats, _, aux = T.forward(params, x, cfg, task_id=task_id)
-    b, t, d = feats.shape
+        return x + params["patch"]["pos"]
+    return images.astype(cfg.activation_dtype)
+
+
+def apply_head(params, feats, task: str, num_seg_classes=M.NUM_SEG_CLASSES):
+    """Task head over trunk features (B, T, d) -> dense prediction.
+    semseg: (B, H, W, classes) f32 logits; depth: (B, H, W) f32."""
+    b = feats.shape[0]
     p = M.PATCH
     nh, nw = M.IMAGE_H // p, M.IMAGE_W // p
     hp = params["heads"][task]
@@ -83,7 +82,21 @@ def forward(params, images, cfg: ArchConfig, task: str = "semseg",
     else:
         y = y.reshape(b, nh, nw, p, p).transpose(0, 1, 3, 2, 4).reshape(
             b, M.IMAGE_H, M.IMAGE_W)
-    return y.astype(jnp.float32), aux
+    return y.astype(jnp.float32)
+
+
+def forward(params, images, cfg: ArchConfig, task: str = "semseg",
+            num_seg_classes=M.NUM_SEG_CLASSES):
+    """images: (B, H, W, 3) f32 or precomputed patch embeddings (B, T, d).
+
+    Returns (prediction, aux_loss).  semseg: (B, H, W, classes) logits;
+    depth: (B, H, W).
+    """
+    task_id = M.TASKS.index(task)
+    x = embed_patches(params, images, cfg)
+    feats, _, aux = T.forward(params, x, cfg, task_id=task_id)
+    y = apply_head(params, feats, task, num_seg_classes=num_seg_classes)
+    return y, aux
 
 
 def multitask_loss(params, images, labels, cfg: ArchConfig, task: str,

@@ -1,3 +1,9 @@
 from repro.serve.engine import ServeConfig, ServingEngine
+from repro.serve.expert_cache import ExpertCache, ExpertUsage, PagedMoE
+from repro.serve.scheduler import LMBackend, Request, Scheduler
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = [
+    "ServeConfig", "ServingEngine",
+    "ExpertCache", "ExpertUsage", "PagedMoE",
+    "LMBackend", "Request", "Scheduler",
+]

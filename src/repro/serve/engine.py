@@ -19,6 +19,7 @@ lengths, EOS short-circuit.
 
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass
 from typing import Optional
 
@@ -31,7 +32,35 @@ from repro.dist.sharding import ShardingRules
 from repro.models import model as M
 from repro.train.step import make_serve_step
 
-__all__ = ["ServeConfig", "ServingEngine"]
+__all__ = ["ServeConfig", "ServingEngine", "is_recurrent", "feedback_inputs"]
+
+
+def is_recurrent(cfg: ArchConfig) -> bool:
+    """True when the arch carries recurrent state (no KV cache semantics)."""
+    return any(k in ("mlstm", "slstm", "rglru_mlp")
+               for k in cfg.block_pattern)
+
+
+@functools.lru_cache(maxsize=None)
+def _stub_embed_table(vocab: int, d: int, dtype: str):
+    return (jax.random.normal(
+        jax.random.PRNGKey(0xE0BED), (max(vocab, 2), d)) * 0.02
+    ).astype(dtype)
+
+
+def feedback_inputs(cfg: ArchConfig, tok: jax.Array):
+    """Next-step model input from sampled (B,) token ids.
+
+    Token-input archs feed the id; modality-frontend stubs ([audio]/[vlm],
+    ``embed_input="embeddings"``) feed a deterministic pseudo-embedding of
+    the id — standing in for the real frontend's codebook/patch embedder,
+    per the assignment's stub contract.  Shared by the static engine and
+    the continuous-batching scheduler.
+    """
+    if cfg.embed_input == "tokens":
+        return tok[:, None]
+    table = _stub_embed_table(cfg.vocab_size, cfg.d_model, cfg.dtype)
+    return jnp.take(table, tok, axis=0)[:, None]
 
 
 @dataclass(frozen=True)
@@ -52,6 +81,7 @@ class ServingEngine:
         self.scfg = scfg
         self.rules = rules
         self._steps: dict[int, tuple] = {}   # task_id -> (prefill, decode)
+        self._chunk_steps: dict[int, tuple] = {}  # task_id -> (mid, last)
 
     def _get_steps(self, task_id: int):
         # task switch = new gate index; the jitted fns are cached per task.
@@ -62,6 +92,39 @@ class ServingEngine:
                                                    task_id=task_id)
         return self._steps[task_id]
 
+    def _get_chunk_steps(self, task_id: int):
+        """Jitted chunked-prefill steps, cached per task (the gate index is
+        closed over, like ``_get_steps``).
+
+        mid(params, toks, state, idx)         -> state        (no logits)
+        last(params, toks, state, idx, last)  -> (logits_at_last, state)
+        """
+        if task_id not in self._chunk_steps:
+            from repro.dist.sharding import use_rules
+
+            cfg, rules = self.cfg, self.rules
+
+            def mid(params, toks, state, idx):
+                with use_rules(rules):
+                    _, st, _ = M.forward(
+                        params, toks, cfg, state=state, cache_index=idx,
+                        task_id=task_id, return_state=True,
+                        logits_mode="last")
+                return st
+
+            def last(params, toks, state, idx, last_idx):
+                with use_rules(rules):
+                    logits, st, _ = M.forward(
+                        params, toks, cfg, state=state, cache_index=idx,
+                        task_id=task_id, return_state=True)
+                return jax.lax.dynamic_index_in_dim(
+                    logits, last_idx, axis=1, keepdims=False), st
+
+            self._chunk_steps[task_id] = (
+                jax.jit(mid, donate_argnums=(2,)),
+                jax.jit(last, donate_argnums=(2,)))
+        return self._chunk_steps[task_id]
+
     def _sample(self, logits, key):
         if self.scfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)
@@ -69,21 +132,7 @@ class ServingEngine:
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
     def _feedback(self, tok):
-        """Next-step model input from sampled token ids.
-
-        Token-input archs feed the id; modality-frontend stubs ([audio]/
-        [vlm], ``embed_input="embeddings"``) feed a deterministic
-        pseudo-embedding of the id — standing in for the real frontend's
-        codebook/patch embedder, per the assignment's stub contract.
-        """
-        if self.cfg.embed_input == "tokens":
-            return tok[:, None]
-        if not hasattr(self, "_stub_embed"):
-            self._stub_embed = (jax.random.normal(
-                jax.random.PRNGKey(0xE0BED),
-                (max(self.cfg.vocab_size, 2), self.cfg.d_model)) * 0.02
-            ).astype(self.cfg.activation_dtype)
-        return jnp.take(self._stub_embed, tok, axis=0)[:, None]
+        return feedback_inputs(self.cfg, tok)
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  task_id: int = 0):
@@ -98,25 +147,41 @@ class ServingEngine:
 
         chunk = scfg.prefill_chunk
         windowed = any("attn_local" in k for k in cfg.block_pattern)
-        if chunk and not windowed and s0 > chunk and s0 % chunk == 0:
-            # chunked prefill: equal chunks through one jitted step; the
-            # chunk offset is traced, so every chunk reuses the compile
-            if not hasattr(self, "_chunk_step"):
-                def chunk_step(params, toks, state, idx):
-                    from repro.dist.sharding import use_rules
-
-                    with use_rules(self.rules):
-                        logits, st, _ = M.forward(
-                            params, toks, cfg, state=state, cache_index=idx,
-                            task_id=task_id, return_state=True,
-                            logits_mode="last")
-                    return logits[:, -1], st
-
-                self._chunk_step = jax.jit(chunk_step, donate_argnums=(2,))
-            for ci in range(0, s0, chunk):
-                logits, state = self._chunk_step(
-                    self.params, prompts[:, ci:ci + chunk], state,
-                    jnp.int32(ci))
+        recurrent = is_recurrent(cfg)
+        if chunk and not windowed and s0 > chunk:
+            # chunked prefill: fixed-size chunks through one jitted step (the
+            # chunk offset and last-token index are traced, so every chunk —
+            # including a padded final one — reuses the compile).
+            mid_step, last_step = self._get_chunk_steps(task_id)
+            n_full, rem = divmod(s0, chunk)
+            if rem == 0:
+                n_mid = n_full - 1
+                final = prompts[:, n_mid * chunk:]
+                last = chunk - 1
+            elif recurrent:
+                # exact remainder chunk: zero-padding would pollute the
+                # recurrent state, so pay one extra compile per distinct
+                # remainder length instead of degrading to one-shot prefill
+                n_mid = n_full
+                final = prompts[:, n_mid * chunk:]
+                last = rem - 1
+            else:
+                # pad the final chunk up to the common shape and mask: the
+                # padded K/V rows land at positions >= s0 and are excluded
+                # by cache_len during decode (the first decode overwrites
+                # position s0); logits are read at the last REAL position
+                n_mid = n_full
+                tail = prompts[:, n_mid * chunk:]
+                pad = jnp.zeros((b, chunk - rem) + tail.shape[2:], tail.dtype)
+                final = jnp.concatenate([tail, pad], axis=1)
+                last = rem - 1
+            for i in range(n_mid):
+                state = mid_step(self.params,
+                                 prompts[:, i * chunk:(i + 1) * chunk],
+                                 state, jnp.int32(i * chunk))
+            logits, state = last_step(self.params, final, state,
+                                      jnp.int32(n_mid * chunk),
+                                      jnp.int32(last))
         else:
             logits, state = prefill(self.params, prompts, state)
         key = jax.random.PRNGKey(scfg.seed)

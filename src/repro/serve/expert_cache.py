@@ -1,0 +1,341 @@
+"""Expert-weight paging: bounded device residency for MoE expert weights.
+
+The software analogue of Edge-MoE's DDR expert streaming (§IV-D): device
+memory holds only a bounded set of expert weights (a configurable fraction
+of E); the rest live in host memory and are paged in on demand.  Three
+pieces:
+
+  * ``ExpertUsage``   — per-task EMA of the router's per-expert dispatch
+    counts (exported by ``core/moe.py`` via ``return_stats`` /
+    ``routing.dispatch_counts``).  This is the prediction signal: the
+    paper's task-level sparsity means each task concentrates its routing
+    mass on a stable expert subset, so usage history predicts the next
+    batch's working set.
+  * ``ExpertCache``   — the residency manager: fixed device slot arrays
+    (R stacked weight tensors per projection), LRU eviction, demand paging
+    with hit/miss/byte accounting, and usage-driven prefetch.
+  * ``PagedMoE``      — a serve-time MoE layer that routes on device, pages
+    the needed experts, and runs the expert FFN in *waves* of at most R
+    resident experts.  Wave outputs land in a per-(token, slot) row buffer
+    (disjoint across waves) and the final gate-weighted combine sums the
+    rows in exactly the same order as ``core.moe.apply_moe`` — the paged
+    forward is **bit-exact** with the all-resident forward (tested).
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import routing as R
+from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
+                            group_shape)
+from repro.core.unified_linear import unified_linear
+
+__all__ = ["ExpertUsage", "ExpertCache", "PagedMoE"]
+
+
+class ExpertUsage:
+    """Per-task EMA + cumulative totals of per-expert dispatch counts."""
+
+    def __init__(self, num_experts: int, num_tasks: int = 1,
+                 decay: float = 0.9):
+        self.num_experts = num_experts
+        self.num_tasks = max(1, num_tasks)
+        self.decay = decay
+        self.ema = np.zeros((self.num_tasks, num_experts), np.float64)
+        self.totals = np.zeros((self.num_tasks, num_experts), np.int64)
+
+    def update(self, counts, task_id: int = 0) -> None:
+        c = np.asarray(counts, np.float64).reshape(-1)
+        if c.size != self.num_experts:
+            raise ValueError(f"counts size {c.size} != E={self.num_experts}")
+        self.ema[task_id] = self.decay * self.ema[task_id] \
+            + (1.0 - self.decay) * c
+        self.totals[task_id] += c.astype(np.int64)
+
+    def hot(self, k: int, task_id: Optional[int] = None) -> list[int]:
+        """Top-k expert ids by EMA usage (one task, or summed over tasks)."""
+        v = self.ema[task_id] if task_id is not None else self.ema.sum(axis=0)
+        return [int(e) for e in np.argsort(-v, kind="stable")[:k]]
+
+    def task_overlap(self) -> float:
+        """Mean pairwise cosine similarity of per-task usage — low values
+        are the paper's task-level sparsity (disjoint working sets)."""
+        if self.num_tasks < 2:
+            return 1.0
+        sims = []
+        for a in range(self.num_tasks):
+            for b in range(a + 1, self.num_tasks):
+                u, v = self.totals[a].astype(float), self.totals[b].astype(float)
+                n = np.linalg.norm(u) * np.linalg.norm(v)
+                sims.append(float(u @ v / n) if n else 1.0)
+        return float(np.mean(sims))
+
+
+class ExpertCache:
+    """Bounded device slots over a host-resident (E, ...) weight store.
+
+    ``host``: {name: (E, ...) np.ndarray} — the per-expert weight tensors
+    (``expert_param_names`` order).  ``max_resident`` slots are allocated on
+    device; ``ensure`` demand-pages, ``prefetch`` warms without touching the
+    demand hit/miss counters.
+    """
+
+    def __init__(self, host: dict[str, np.ndarray], max_resident: int,
+                 usage: Optional[ExpertUsage] = None):
+        if not host:
+            raise ValueError("empty expert weight store")
+        self.names = tuple(host)
+        self.num_experts = next(iter(host.values())).shape[0]
+        for n, w in host.items():
+            if w.shape[0] != self.num_experts:
+                raise ValueError(f"{n}: leading dim {w.shape[0]} != E")
+        self.max_resident = max(1, min(int(max_resident), self.num_experts))
+        self.host = {n: np.asarray(w) for n, w in host.items()}
+        self.usage = usage
+        # device slot store: one stacked (R, ...) tensor per weight name
+        self.slots = {
+            n: jnp.zeros((self.max_resident,) + w.shape[1:], w.dtype)
+            for n, w in self.host.items()
+        }
+        self._slot_expert = [-1] * self.max_resident     # slot -> expert id
+        self._lru: OrderedDict[int, int] = OrderedDict()  # expert -> slot
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.bytes_paged = 0
+        self._write = jax.jit(
+            lambda slots, new, r: {
+                n: slots[n].at[r].set(new[n]) for n in slots},
+            donate_argnums=(0,))
+        self._expert_bytes = sum(int(w[0].nbytes) for w in self.host.values())
+
+    # -------------------------------------------------------------- state
+
+    @property
+    def resident(self) -> list[int]:
+        return [e for e in self._slot_expert if e >= 0]
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 1.0
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions, "bytes_paged": self.bytes_paged,
+            "hit_rate": self.hit_rate,
+            "max_resident": self.max_resident,
+            "resident_fraction": self.max_resident / self.num_experts,
+        }
+
+    # ------------------------------------------------------------- paging
+
+    def _page_in(self, expert: int, pinned: set[int]) -> None:
+        free = [s for s, e in enumerate(self._slot_expert) if e < 0]
+        if free:
+            slot = free[0]
+        else:
+            victim = next(e for e in self._lru if e not in pinned)
+            slot = self._lru.pop(victim)
+            self._slot_expert[slot] = -1
+            self.evictions += 1
+        new = {n: jax.device_put(self.host[n][expert]) for n in self.names}
+        self.slots = self._write(self.slots, new, slot)
+        self._slot_expert[slot] = expert
+        self._lru[expert] = slot
+        self.bytes_paged += self._expert_bytes
+
+    def ensure(self, expert_ids, record: bool = True) -> None:
+        """Make every id in ``expert_ids`` device-resident (≤ max_resident)."""
+        needed = list(dict.fromkeys(int(e) for e in expert_ids))
+        if len(needed) > self.max_resident:
+            raise ValueError(
+                f"{len(needed)} experts needed at once but only "
+                f"{self.max_resident} slots — page in waves")
+        pinned = set(needed)
+        for e in needed:
+            if e in self._lru:
+                self._lru.move_to_end(e)
+                if record:
+                    self.hits += 1
+            else:
+                if record:
+                    self.misses += 1
+                self._page_in(e, pinned)
+
+    def prefetch(self, expert_ids) -> None:
+        """Warm residency (e.g. from ``ExpertUsage.hot``) without demand
+        accounting — prefetched experts later hit in ``ensure``."""
+        self.ensure(list(expert_ids)[: self.max_resident], record=False)
+
+    def remap(self) -> np.ndarray:
+        """(E,) int32: expert id -> device slot (0 for non-resident; callers
+        only dereference resident ids — invalid routing slots are masked)."""
+        m = np.zeros((self.num_experts,), np.int32)
+        for s, e in enumerate(self._slot_expert):
+            if e >= 0:
+                m[e] = s
+        return m
+
+
+class PagedMoE:
+    """Serve-time MoE layer with bounded expert residency.
+
+    Call semantics match ``core.moe.apply_moe(params, cfg, x, task_id)``:
+    returns ``(y, aux)`` — bit-exact with the all-resident grouped path.
+    The expert FFN runs in waves of at most ``max_resident`` experts; each
+    wave writes its tokens' output rows into a shared (token, slot) row
+    buffer (waves touch disjoint rows), and the final combine applies the
+    gate weights and sums the k slots per token in the same order as
+    ``routing.combine`` — so splitting into waves never changes the
+    floating-point result.
+    """
+
+    def __init__(self, params, cfg: MoEConfig,
+                 resident_fraction: float = 0.5,
+                 usage: Optional[ExpertUsage] = None,
+                 usage_decay: float = 0.9):
+        if cfg.impl not in ("grouped", "onehot"):
+            raise ValueError("PagedMoE serves the single-device paths")
+        self.cfg = cfg
+        names = expert_param_names(cfg)
+        host = {n: np.asarray(params[n]) for n in names}
+        max_resident = max(cfg.top_k,
+                           int(np.ceil(resident_fraction * cfg.num_experts)))
+        self.usage = usage or ExpertUsage(cfg.num_experts, cfg.num_tasks,
+                                          decay=usage_decay)
+        self.cache = ExpertCache(host, max_resident, usage=self.usage)
+        self.gate = jnp.asarray(params["gate"])
+        gb = params.get("gate_bias")   # optional (tasks, E) logit bias
+        self.gate_bias = None if gb is None else jnp.asarray(gb)
+        self.shared = {k: params[k] for k in
+                       ("shared_wg", "shared_wu", "shared_wd") if k in params}
+        self._route_fn = None
+        self._wave_fn = None
+        self._finish_fn = None
+
+    # ------------------------------------------------------- jitted stages
+
+    def _build(self, g: int, capacity: int):
+        cfg = self.cfg
+        e, k, rs = cfg.num_experts, cfg.top_k, self.cache.max_resident
+
+        has_bias = self.gate_bias is not None
+
+        def route(gate_w, gate_b, groups, real):
+            def per_group(xg, rm):
+                logits = jnp.einsum("td,de->te", xg.astype(jnp.float32),
+                                    gate_w)
+                if has_bias:
+                    logits = logits + gate_b.astype(jnp.float32)
+                r = R.route(logits, k, capacity,
+                            renormalize=cfg.renormalize)
+                # pad rows are excluded from usage stats (as in apply_moe)
+                stat_valid = r.valid & rm[:, None]
+                counts = jnp.zeros((e,), jnp.int32).at[
+                    r.expert.reshape(-1)].add(
+                        stat_valid.reshape(-1).astype(jnp.int32))
+                return r, counts
+            return jax.vmap(per_group)(groups, real)
+
+        def wave(groups, routing, slots, wave_mask, remap, rows_acc):
+            def per_group(xg, r, rows):
+                in_wave = wave_mask[r.expert]          # (T, k) bool
+                r_w = R.Routing(
+                    expert=remap[r.expert], gate=r.gate,
+                    position=r.position, valid=r.valid & in_wave,
+                    probs=r.probs)
+                buf = R.dispatch(xg, r_w, rs, capacity)
+                sizes = R.dispatch_counts(r_w, rs)
+                out = _expert_ffn(slots, cfg, buf, sizes)
+                ef = r_w.expert.reshape(-1)
+                pf = jnp.minimum(r_w.position.reshape(-1), capacity - 1)
+                got = out[ef, pf]                      # (T*k, d)
+                sel = (r_w.valid.reshape(-1))[:, None]
+                return jnp.where(sel, got, rows)
+            return jax.vmap(per_group)(groups, routing, rows_acc)
+
+        def finish(routing, rows_acc, real):
+            def per_group(r, rows, rm):
+                # identical weighting + slot-sum order to routing.combine
+                w = (r.gate.reshape(-1)
+                     * r.valid.reshape(-1)).astype(rows.dtype)
+                y = (rows * w[:, None]).reshape(g, k, -1).sum(axis=1)
+                aux = R.load_balance_loss(r.probs, r.expert, e, mask=rm)
+                return y, aux
+            return jax.vmap(per_group)(routing, rows_acc, real)
+
+        self._route_fn = jax.jit(route)
+        self._wave_fn = jax.jit(wave, donate_argnums=(5,))
+        self._finish_fn = jax.jit(finish)
+        self._built_for = (g, capacity)
+
+    # ------------------------------------------------------------- forward
+
+    def __call__(self, x: jax.Array, task_id: int = 0):
+        cfg = self.cfg
+        orig_shape = x.shape
+        d = x.shape[-1]
+        flat = x.reshape(-1, d)
+        t_total = flat.shape[0]
+        g, t_pad = group_shape(t_total, cfg.group_size)
+        if t_pad != t_total:
+            flat = jnp.concatenate(
+                [flat, jnp.zeros((t_pad - t_total, d), flat.dtype)])
+        real = (jnp.arange(t_pad) < t_total).reshape(t_pad // g, g)
+        groups = flat.reshape(t_pad // g, g, d)
+        capacity = cfg.capacity(g)
+        if getattr(self, "_built_for", None) != (g, capacity):
+            self._build(g, capacity)
+
+        gate_w = self.gate
+        if gate_w.ndim == 3:
+            gate_w = gate_w[int(task_id)]
+        gate_b = self.gate_bias
+        if gate_b is not None and gate_b.ndim == 2:
+            gate_b = gate_b[int(task_id)]
+        if gate_b is None:
+            gate_b = jnp.zeros((cfg.num_experts,), jnp.float32)
+        routing, counts = self._route_fn(gate_w, gate_b, groups, real)
+
+        counts_np = np.asarray(counts.sum(axis=0))
+        self.usage.update(counts_np, task_id)
+        needed = [int(i) for i in np.nonzero(counts_np)[0]]
+        # wave order: already-resident experts first, so warm residency
+        # (prefetch or the previous batch) turns into demand hits
+        res = set(self.cache.resident)
+        needed.sort(key=lambda i: (i not in res, i))
+
+        rs = self.cache.max_resident
+        n = groups.shape[0]
+        rows = jnp.zeros((n, g * cfg.top_k, d), groups.dtype)
+        for w0 in range(0, len(needed), rs):
+            wave_ids = needed[w0:w0 + rs]
+            self.cache.ensure(wave_ids)
+            mask = np.zeros((cfg.num_experts,), bool)
+            mask[wave_ids] = True
+            rows = self._wave_fn(groups, routing, self.cache.slots,
+                                 jnp.asarray(mask),
+                                 jnp.asarray(self.cache.remap()), rows)
+        y, aux = self._finish_fn(routing, rows, real)
+        y = y.reshape(-1, d)[:t_total].reshape(orig_shape).astype(x.dtype)
+
+        if cfg.num_shared_experts:
+            gshared = unified_linear(x, self.shared["shared_wg"],
+                                     activation="silu", use_lut=cfg.use_lut)
+            ushared = unified_linear(x, self.shared["shared_wu"])
+            y = y + unified_linear((gshared * ushared).astype(x.dtype),
+                                   self.shared["shared_wd"])
+        return y, aux.mean()
+
+    def prefetch(self, task_id: Optional[int] = None) -> None:
+        """Warm the device slots with the usage-EMA-hot experts for a task —
+        called by the scheduler ahead of a task-bucket switch."""
+        self.cache.prefetch(self.usage.hot(self.cache.max_resident, task_id))

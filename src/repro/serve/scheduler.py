@@ -1,0 +1,480 @@
+"""Task-aware serving scheduler: continuous batching over task buckets.
+
+The multi-request generalization of the paper's zero-cost task switch
+(§IV-F).  Requests carry a ``task_id``, an arrival time, and a prompt; the
+scheduler keeps one *bucket* of decode slots per task (all slots in a bucket
+share the task's gating network, so the jitted decode step is cached per
+task exactly like the static engine), admits queued requests into freed
+slots mid-flight, and rotates decode quanta round-robin across tasks so one
+hot task cannot starve the rest.
+
+Continuous batching mechanics:
+
+  * each bucket owns a batched decode state (KV caches / recurrent state)
+    of ``slots`` sequences plus a per-slot ``cache_pos`` vector — the
+    vector-``cache_index`` decode path added to ``models/transformer.py``;
+  * admission prefills the new request alone (batch 1, prompt padded up to
+    a length bucket for attention archs so prefill compiles are bounded)
+    and splices the resulting state into the freed slot with a donated
+    per-leaf ``dynamic_update_slice`` (``_StateSlots``);
+  * a request finishes on its own EOS/max-tokens; its slot is immediately
+    reusable — no waiting for the rest of the batch (the static engine's
+    tail waste, and where the throughput win comes from);
+  * MoE archs: every decode step exports the per-expert dispatch counts
+    (``forward(..., return_expert_counts=True)``) into a per-task
+    ``ExpertUsage`` — the router statistics that drive expert-cache
+    prefetch and make task-level sparsity observable.
+
+``Scheduler`` is backend-generic: ``LMBackend`` serves autoregressive
+decode; ``serve/vision.py`` provides a batched M³ViT backend so the paper's
+own semseg/depth model is served through the same queue and fairness
+machinery.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.dist.sharding import ShardingRules, use_rules
+from repro.models import model as M
+from repro.serve.engine import ServeConfig, feedback_inputs, is_recurrent
+from repro.serve.expert_cache import ExpertUsage
+
+__all__ = ["Request", "Scheduler", "LMBackend"]
+
+
+@dataclass
+class Request:
+    rid: int
+    task_id: int
+    prompt: Any                     # (S0,) int32 tokens | (S0, d) embeddings
+    max_new_tokens: int = 0         # LM: tokens to generate (>=1)
+    arrival: float = 0.0
+    eos_id: Optional[int] = None    # None => backend default
+    # filled in by the scheduler
+    tokens: list = field(default_factory=list)
+    result: Any = None              # vision: prediction array
+    t_admit: Optional[float] = None
+    t_first: Optional[float] = None
+    t_done: Optional[float] = None
+
+    @property
+    def ttft(self) -> float:
+        return (self.t_first or 0.0) - self.arrival
+
+    @property
+    def latency(self) -> float:
+        return (self.t_done or 0.0) - self.arrival
+
+
+def _pad_len(s0: int, bucket: int) -> int:
+    return s0 if bucket <= 0 else -(-s0 // bucket) * bucket
+
+
+class _StateSlots:
+    """Recovers the per-leaf batch axis of a batched decode state, for
+    splicing a batch-1 state into slot ``i`` (``LMBackend.admit_step``).
+
+    The batch axis differs per leaf (stacked scanned layers prepend the
+    period axis), so it is recovered structurally: build the state shape
+    twice with different batch sizes and the axis whose dim changed is the
+    batch axis.
+    """
+
+    def __init__(self, cfg: ArchConfig, max_len: int):
+        s1 = jax.eval_shape(lambda: M.init_state(cfg, 1, max_len))
+        s2 = jax.eval_shape(lambda: M.init_state(cfg, 2, max_len))
+
+        def axis(a, b):
+            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                     if x != y]
+            if len(diffs) != 1:
+                raise ValueError(f"ambiguous batch axis: {a.shape}")
+            return diffs[0]
+
+        self._axes = jax.tree.leaves(jax.tree.map(axis, s1, s2))
+
+
+class LMBackend:
+    """Autoregressive decode backend with *mixed-task* batches: one decode
+    step serves slots gated by different tasks (per-token gating — the
+    per-slot generalization of the paper's zero-cost task switch), with
+    vector cache positions and MoE router-usage export.  Admission prefills
+    are per-task jitted (the §IV-F cached-pointer switch)."""
+
+    bucketing = "mixed"   # one full-width bucket; fairness at admission
+
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
+                 rules: Optional[ShardingRules] = None,
+                 prompt_pad: int = 16):
+        if scfg.temperature > 0.0:
+            raise ValueError("the scheduler decodes greedily (argmax is "
+                             "fused into the jitted step)")
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self.rules = rules
+        self.recurrent = is_recurrent(cfg)
+        # padded prefill relies on cache_len masking — attention archs only
+        self.prompt_pad = 0 if self.recurrent else prompt_pad
+        self.num_tasks = max(cfg.num_tasks,
+                             cfg.moe.num_tasks if cfg.moe else 1)
+        self.usage = (ExpertUsage(cfg.moe.num_experts, self.num_tasks)
+                      if cfg.moe else None)
+        self._slots_io = _StateSlots(cfg, scfg.max_len)
+        self._prefill: dict[int, Any] = {}   # task -> jitted fused admit
+        self._decode_fn = None               # one decode fn, tasks traced
+
+    # ----------------------------------------------------------- steps
+
+    def admit_step(self, task_id: int):
+        """One fused jitted call per admission: batch-1 prefill against an
+        in-graph zero state, greedy first token at the last REAL prompt
+        position, and splice into the (donated) bucket state slot."""
+        if task_id not in self._prefill:
+            cfg, rules, scfg = self.cfg, self.rules, self.scfg
+            axes = self._slots_io._axes
+
+            def admit(params, inputs, big_state, slot, last_idx):
+                with use_rules(rules):
+                    small = M.init_state(cfg, 1, scfg.max_len)
+                    logits, st, _ = M.forward(
+                        params, inputs, cfg, state=small, cache_index=0,
+                        task_id=task_id, return_state=True)
+                tok = jnp.argmax(jax.lax.dynamic_index_in_dim(
+                    logits, last_idx, axis=1, keepdims=False)[0], axis=-1)
+                leaves, treedef = jax.tree_util.tree_flatten(big_state)
+                small_leaves = jax.tree.leaves(st)
+                out = [jax.lax.dynamic_update_slice_in_dim(b, s, slot,
+                                                           axis=ax)
+                       for b, s, ax in zip(leaves, small_leaves, axes)]
+                return tok.astype(jnp.int32), \
+                    jax.tree_util.tree_unflatten(treedef, out)
+
+            self._prefill[task_id] = jax.jit(admit, donate_argnums=(2,))
+        return self._prefill[task_id]
+
+    def decode_step(self):
+        """One decode fn for every batch composition: the per-slot task ids
+        are a traced (B,) operand, so mixing tasks never recompiles."""
+        if self._decode_fn is None:
+            cfg, rules = self.cfg, self.rules
+            want_counts = cfg.moe is not None
+
+            def decode(params, toks, state, cache_pos, task_ids):
+                with use_rules(rules):
+                    out = M.forward(
+                        params, feedback_inputs(cfg, toks), cfg, state=state,
+                        cache_index=cache_pos, decode=True,
+                        task_id=task_ids, return_state=True,
+                        return_expert_counts=want_counts)
+                if want_counts:
+                    logits, st, _, counts = out
+                else:
+                    logits, st, _ = out
+                    counts = jnp.zeros((0,), jnp.int32)
+                # greedy sampling stays in-graph: one host sync per step
+                return jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32), \
+                    st, counts
+
+            self._decode_fn = jax.jit(decode, donate_argnums=(2,))
+        return self._decode_fn
+
+    def make_bucket(self, task_id: int, slots: int) -> "LMTaskBucket":
+        return LMTaskBucket(self, task_id, slots)
+
+
+class LMTaskBucket:
+    """``slots`` decode lanes.  With ``task_id=None`` (the LM backend's
+    mixed mode) every slot carries its own task id into the decode step;
+    with a fixed task id all lanes share one gating network."""
+
+    def __init__(self, backend: LMBackend, task_id: Optional[int],
+                 slots: int):
+        self.backend = backend
+        self.task_id = task_id
+        self.slots = slots
+        self.state = M.init_state(backend.cfg, slots, backend.scfg.max_len)
+        self.cache_pos = np.zeros((slots,), np.int32)
+        self.last_tok = np.zeros((slots,), np.int32)
+        self.task_slots = np.zeros((slots,), np.int32)
+        self.reqs: list[Optional[Request]] = [None] * slots
+        self.steps = 0               # decode steps executed
+        self.slot_steps = 0          # decode slot-steps with a live request
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.reqs)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.reqs) if r is None]
+
+    def _eos(self, req: Request) -> int:
+        return self.backend.scfg.eos_id if req.eos_id is None else req.eos_id
+
+    def _emit(self, req: Request, tok: int, now: float):
+        """Record one generated token; returns True when the request is
+        done (its own EOS or token budget — the slot frees immediately)."""
+        req.tokens.append(tok)
+        if req.t_first is None:
+            req.t_first = now
+        eos = self._eos(req)
+        return (eos >= 0 and tok == eos) \
+            or len(req.tokens) >= req.max_new_tokens
+
+    def admit(self, req: Request, now: float) -> list[Request]:
+        """Prefill ``req`` alone and splice it into a free slot."""
+        b = self.backend
+        slot = self.free_slots[0]
+        prompt = np.asarray(req.prompt)[None]        # (1, S0[, d])
+        s0 = prompt.shape[1]
+        padded = _pad_len(s0, b.prompt_pad)
+        if padded > b.scfg.max_len:
+            raise ValueError(f"prompt {s0} > max_len {b.scfg.max_len}")
+        if s0 + req.max_new_tokens - 1 > b.scfg.max_len:
+            # decode step i writes K/V at position s0+i: reject a request
+            # that cannot fit BEFORE it occupies a slot, not mid-flight
+            raise ValueError(
+                f"request {req.rid}: prompt {s0} + {req.max_new_tokens} "
+                f"new tokens does not fit max_len {b.scfg.max_len}")
+        if padded != s0:
+            pad = np.zeros((1, padded - s0) + prompt.shape[2:], prompt.dtype)
+            prompt = np.concatenate([prompt, pad], axis=1)
+        tok, self.state = b.admit_step(req.task_id)(
+            b.params, jnp.asarray(prompt), self.state, slot,
+            jnp.int32(s0 - 1))
+        tok = int(np.asarray(tok))
+        req.t_admit = now
+        self.cache_pos[slot] = s0
+        self.last_tok[slot] = tok
+        self.task_slots[slot] = req.task_id
+        self.reqs[slot] = req
+        if self._emit(req, tok, now):
+            req.t_done = now
+            self.reqs[slot] = None
+            return [req]
+        return []
+
+    def run_quantum(self, n: int, now_fn,
+                    admit_cb=None) -> list[Request]:
+        """Up to ``n`` decode steps over the whole bucket; returns finished
+        requests (their slots are already freed).  ``admit_cb`` runs before
+        every step so slots freed mid-quantum refill immediately — the
+        continuous part of continuous batching."""
+        b = self.backend
+        decode = b.decode_step()
+        finished: list[Request] = []
+        counts_sum = None
+        for _ in range(n):
+            if admit_cb is not None:
+                admit_cb()
+            if self.active == 0:
+                break
+            tok, self.state, counts = decode(
+                b.params, jnp.asarray(self.last_tok), self.state,
+                jnp.asarray(self.cache_pos), jnp.asarray(self.task_slots))
+            self.steps += 1
+            self.slot_steps += self.active
+            if b.usage is not None:   # device-side accumulate, sync once
+                counts_sum = counts if counts_sum is None \
+                    else counts_sum + counts
+            nxt = np.asarray(tok)
+            now = now_fn()
+            for i, req in enumerate(self.reqs):
+                if req is None:
+                    continue
+                self.cache_pos[i] += 1
+                self.last_tok[i] = nxt[i]
+                if self._emit(req, int(nxt[i]), now):
+                    # finished-first: a request whose generation exactly
+                    # fills the cache frees its slot instead of tripping
+                    # the overrun guard below
+                    req.t_done = now
+                    self.reqs[i] = None
+                    self.cache_pos[i] = 0
+                    self.last_tok[i] = 0
+                    finished.append(req)
+                elif self.cache_pos[i] >= b.scfg.max_len:
+                    raise RuntimeError("decode ran past max_len")
+        if counts_sum is not None and self.backend.usage is not None:
+            c = np.asarray(counts_sum)
+            if c.ndim == 2:        # mixed batch: one (E,) row per task
+                for t in range(c.shape[0]):
+                    if c[t].any():
+                        self.backend.usage.update(c[t], t)
+            else:
+                self.backend.usage.update(c, self.task_id or 0)
+        return finished
+
+
+class Scheduler:
+    """Task-fair continuous batching over a backend's buckets.
+
+    Two bucketing modes (picked by ``backend.bucketing``):
+
+      * ``"mixed"`` (LM decode): ONE bucket spanning ``total_slots`` decode
+        lanes; freed slots are offered round-robin across task queues, so a
+        hot task cannot monopolize admission while the decode batch itself
+        mixes tasks (per-slot gating).
+      * ``"per_task"`` (vision): one bucket per task, ``total_slots`` split
+        evenly; decode/infer quanta rotate round-robin across runnable
+        tasks.
+
+    Either way total batch capacity equals a static engine's batch of
+    ``total_slots``.
+    """
+
+    def __init__(self, backend, total_slots: int = 8, quantum: int = 4,
+                 num_tasks: Optional[int] = None, clock=None):
+        self.backend = backend
+        self.num_tasks = num_tasks or getattr(backend, "num_tasks", 1)
+        self.mixed = getattr(backend, "bucketing", "per_task") == "mixed"
+        self.slots_per_bucket = total_slots if self.mixed \
+            else max(1, total_slots // self.num_tasks)
+        self.quantum = quantum
+        self.clock = clock or time.perf_counter
+        self.buckets: dict[Any, Any] = {}
+        self.queues: dict[int, deque] = {}
+        self.rotation: list[int] = []
+        self._rr = 0
+        self.finished: list[Request] = []
+        self._t0: Optional[float] = None
+
+    def now(self) -> float:
+        if self._t0 is None:
+            self._t0 = self.clock()
+        return self.clock() - self._t0
+
+    def submit(self, req: Request) -> None:
+        if req.task_id not in self.queues:
+            self.queues[req.task_id] = deque()
+            self.rotation.append(req.task_id)
+        self.queues[req.task_id].append(req)
+
+    def _bucket(self, key):
+        if key not in self.buckets:
+            self.buckets[key] = self.backend.make_bucket(
+                key, self.slots_per_bucket)
+        return self.buckets[key]
+
+    def _runnable(self, task_id: int, now: float) -> bool:
+        q = self.queues.get(task_id)
+        queued = bool(q) and q[0].arrival <= now
+        bucket = self.buckets.get(task_id)
+        return queued or (bucket is not None and bucket.active > 0)
+
+    def pending(self) -> bool:
+        if any(self.queues.get(t) for t in self.rotation):
+            return True
+        return any(b.active > 0 for b in self.buckets.values())
+
+    def _admit_mixed(self, bucket) -> bool:
+        """Offer freed slots round-robin across task queues (one request per
+        runnable task per lap) — admission-level fairness for mixed mode."""
+        admitted = False
+        progress = True
+        while bucket.free_slots and progress and self.rotation:
+            progress = False
+            for off in range(len(self.rotation)):
+                if not bucket.free_slots:
+                    break
+                t = self.rotation[(self._rr + off) % len(self.rotation)]
+                q = self.queues.get(t)
+                if q and q[0].arrival <= self.now():
+                    self.finished.extend(
+                        bucket.admit(q.popleft(), self.now()))
+                    self._rr = (self._rr + off + 1) % len(self.rotation)
+                    admitted = progress = True
+                    break
+        return admitted
+
+    def step(self) -> bool:
+        """One scheduling quantum.  Returns False when nothing was runnable
+        (e.g. every remaining arrival is in the future)."""
+        now = self.now()
+        if self.mixed:
+            bucket = self._bucket(None)
+            admitted = self._admit_mixed(bucket)
+            if bucket.active == 0 and not admitted:
+                return False
+            self.finished.extend(bucket.run_quantum(
+                self.quantum, self.now,
+                admit_cb=lambda: self._admit_mixed(bucket)))
+            return True
+        for off in range(len(self.rotation)):
+            task = self.rotation[(self._rr + off) % len(self.rotation)]
+            if self._runnable(task, now):
+                self._rr = (self._rr + off + 1) % len(self.rotation)
+                bucket = self._bucket(task)
+                q = self.queues[task]
+
+                def admit():
+                    while bucket.free_slots and q \
+                            and q[0].arrival <= self.now():
+                        done = bucket.admit(q.popleft(), self.now())
+                        self.finished.extend(done)
+
+                admit()
+                self.finished.extend(bucket.run_quantum(
+                    self.quantum, self.now, admit_cb=admit))
+                return True
+        return False
+
+    def run(self, requests=None) -> list[Request]:
+        """Submit ``requests`` (optional) and drain everything.  Spins (with
+        a tiny sleep) while all remaining arrivals are in the future —
+        open-loop driving."""
+        for r in requests or ():
+            self.submit(r)
+        self.now()                     # start the clock
+        while self.pending():
+            if not self.step():
+                time.sleep(0.0005)
+        return self.finished
+
+    # ------------------------------------------------------------ metrics
+
+    def metrics(self) -> dict[str, Any]:
+        done = [r for r in self.finished if r.t_done is not None]
+        toks = sum(len(r.tokens) for r in done)
+        items = len(done)
+        span = max((r.t_done for r in done), default=0.0) - \
+            min((r.arrival for r in done), default=0.0)
+        lat = np.array([r.latency for r in done]) if done else np.zeros(1)
+        ttft = np.array([r.ttft for r in done if r.t_first is not None])
+        out: dict[str, Any] = {
+            "requests": items,
+            "tokens": toks,
+            "span_s": span,
+            "tok_per_s": toks / span if span > 0 else 0.0,
+            "items_per_s": items / span if span > 0 else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)),
+            "latency_p99_s": float(np.percentile(lat, 99)),
+            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+            "per_task": {
+                t: sum(1 for r in done if r.task_id == t)
+                for t in self.rotation
+            },
+        }
+        usage = getattr(self.backend, "usage", None)
+        if usage is not None:
+            out["expert_usage_task_overlap"] = usage.task_overlap()
+        slot_steps = sum(getattr(b, "slot_steps", 0)
+                         for b in self.buckets.values())
+        steps = sum(getattr(b, "steps", 0) for b in self.buckets.values())
+        cap = self.slots_per_bucket
+        if steps:
+            out["slot_utilization"] = slot_steps / (steps * cap)
+        cache_stats = getattr(self.backend, "cache_stats", None)
+        if callable(cache_stats):
+            out["expert_cache"] = cache_stats()
+        return out

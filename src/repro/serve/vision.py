@@ -1,0 +1,195 @@
+"""Batched M³ViT serving: the paper's own vision model behind the scheduler.
+
+Single-shot dense prediction (patchify → trunk → task head, no KV cache),
+executed layer-by-layer so every MoE block runs through the paged expert
+cache (``serve/expert_cache.py``): attention/MLP sub-blocks are jitted once
+and reused across layers, while expert FFNs page their weights in bounded
+waves.  Task switching between semseg and depth is the paper's §IV-F gate
+index switch — plus, at the serving layer, an expert-cache prefetch of the
+incoming task's usage-hot experts.
+
+``VisionBackend`` adapts this to the ``Scheduler`` bucket protocol: a
+request's prompt is an image (H, W, 3) (or precomputed patch embeddings);
+a bucket batches up to ``slots`` same-task requests and completes them in
+one forward.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import m3vit as MV
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import vit as V
+from repro.serve.expert_cache import PagedMoE
+from repro.serve.scheduler import Request
+
+__all__ = ["M3ViTServer", "VisionBackend"]
+
+
+class M3ViTServer:
+    """Layer-streamed M³ViT executor with paged MoE blocks.
+
+    ``resident_fraction`` bounds each MoE layer's device-resident experts;
+    1.0 keeps everything resident (still exercising the paged code path,
+    which is bit-exact with ``core.moe.apply_moe`` — see tests).
+    """
+
+    def __init__(self, cfg: ArchConfig, params,
+                 resident_fraction: float = 0.5):
+        if cfg.family != "vit-moe":
+            raise ValueError("M3ViTServer serves the vit-moe family")
+        self.cfg = cfg
+        self.params = params
+        self.mcfg = T.moe_config(cfg)
+        period = cfg.period
+        n_scan = cfg.num_layers // period
+        self.kinds = [cfg.block_pattern[i % period]
+                      for i in range(cfg.num_layers)]
+        self.layer_params: list[Any] = []
+        for i in range(cfg.num_layers):
+            p, b = divmod(i, period)
+            if p < n_scan:
+                lp = jax.tree.map(lambda a: a[p],
+                                  params["layers"][f"b{b}"])
+            else:
+                lp = params["rest"][i - n_scan * period]
+            self.layer_params.append(lp)
+        self.paged = {
+            i: PagedMoE(self.layer_params[i]["moe"], self.mcfg,
+                        resident_fraction=resident_fraction)
+            for i, kind in enumerate(self.kinds) if kind == "attn_moe"
+        }
+
+        def dense_block(bp, x, pos):
+            h = L.apply_norm(bp["ln1"], x, cfg)
+            a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
+                                     causal=False)
+            x = x + a
+            h = L.apply_norm(bp["ln2"], x, cfg)
+            return x + L.apply_mlp(bp["mlp"], h, cfg)
+
+        def moe_pre(bp, x, pos):
+            h = L.apply_norm(bp["ln1"], x, cfg)
+            a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
+                                     causal=False)
+            x = x + a
+            return x, L.apply_norm(bp["ln2"], x, cfg)
+
+        self._embed = jax.jit(lambda prm, img: V.embed_patches(prm, img, cfg))
+        self._dense = jax.jit(dense_block)
+        self._moe_pre = jax.jit(moe_pre)
+        self._final = jax.jit(
+            lambda prm, x: L.apply_norm(prm["final_norm"], x, cfg))
+        self._heads = {
+            t: jax.jit(lambda prm, f, _t=t: V.apply_head(prm, f, _t))
+            for t in MV.TASKS
+        }
+
+    def infer(self, images, task) -> np.ndarray:
+        """images: (B, H, W, 3) f32 or (B, T, d) patch embeddings.
+        ``task``: name or index.  Returns the dense prediction (numpy)."""
+        task_id = MV.TASKS.index(task) if isinstance(task, str) else int(task)
+        x = self._embed(self.params, jnp.asarray(images))
+        b, s = x.shape[0], x.shape[1]
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+        for i, kind in enumerate(self.kinds):
+            bp = self.layer_params[i]
+            if kind == "attn_moe":
+                xr, h = self._moe_pre(bp, x, pos)
+                y, _ = self.paged[i](h, task_id=task_id)
+                x = xr + y
+            else:
+                x = self._dense(bp, x, pos)
+        feats = self._final(self.params, x)
+        return np.asarray(self._heads[MV.TASKS[task_id]](self.params, feats))
+
+    def prefetch(self, task_id: int) -> None:
+        """Warm every MoE layer's expert cache with the task's hot set —
+        called by the scheduler ahead of a task-bucket switch."""
+        for paged in self.paged.values():
+            paged.prefetch(task_id)
+
+    def cache_stats(self) -> dict[str, Any]:
+        agg = {"hits": 0, "misses": 0, "evictions": 0, "bytes_paged": 0}
+        frac = 0.0
+        for paged in self.paged.values():
+            s = paged.cache.stats()
+            for k in ("hits", "misses", "evictions", "bytes_paged"):
+                agg[k] += s[k]
+            frac = s["resident_fraction"]
+        tot = agg["hits"] + agg["misses"]
+        agg["hit_rate"] = agg["hits"] / tot if tot else 1.0
+        agg["resident_fraction"] = frac
+        return agg
+
+
+class VisionTaskBucket:
+    """Stages up to ``slots`` same-task requests and serves them in one
+    batched forward (a vision request completes in a single quantum)."""
+
+    def __init__(self, backend: "VisionBackend", task_id: int, slots: int):
+        self.backend = backend
+        self.task_id = task_id
+        self.slots = slots
+        self.staged: list[Request] = []
+        self.steps = 0
+        self.slot_steps = 0
+
+    @property
+    def active(self) -> int:
+        return len(self.staged)
+
+    @property
+    def free_slots(self) -> list[int]:
+        return list(range(self.slots - len(self.staged)))
+
+    def admit(self, req: Request, now: float) -> list[Request]:
+        req.t_admit = now
+        self.staged.append(req)
+        return []
+
+    def run_quantum(self, n: int, now_fn, admit_cb=None) -> list[Request]:
+        if admit_cb is not None:
+            admit_cb()      # top up the batch before launching it
+        if not self.staged:
+            return []
+        server = self.backend.server
+        server.prefetch(self.task_id)
+        batch = self.staged
+        self.staged = []
+        imgs = np.stack([np.asarray(r.prompt) for r in batch])
+        if imgs.shape[0] < self.slots:   # fixed batch shape: one compile
+            pad = np.repeat(imgs[:1], self.slots - imgs.shape[0], axis=0)
+            imgs = np.concatenate([imgs, pad], axis=0)
+        preds = server.infer(imgs, self.task_id)
+        now = now_fn()
+        self.steps += 1
+        self.slot_steps += len(batch)
+        for i, req in enumerate(batch):
+            req.result = preds[i]
+            req.t_first = req.t_done = now
+        return batch
+
+
+class VisionBackend:
+    """Scheduler backend serving M³ViT semseg/depth through task buckets."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 resident_fraction: float = 0.5):
+        self.server = M3ViTServer(cfg, params,
+                                  resident_fraction=resident_fraction)
+        self.num_tasks = len(MV.TASKS)
+        self.usage = None   # per-layer usage lives inside each PagedMoE
+
+    def make_bucket(self, task_id: int, slots: int) -> VisionTaskBucket:
+        return VisionTaskBucket(self, task_id, slots)
+
+    def cache_stats(self) -> dict[str, Any]:
+        return self.server.cache_stats()

@@ -108,3 +108,67 @@ class TestGradients:
         # expert weights receive gradient (at least one expert used)
         assert float(jnp.abs(g["w1"]).max()) > 0
         assert float(jnp.abs(g["gate"]).max()) > 0
+
+
+class TestGroupPadding:
+    """Regression for the degenerate group-size trim: prime token counts
+    used to fall back to g=1 (one routing group per token)."""
+
+    def test_group_shape_no_degeneration(self):
+        g, padded = M.group_shape(127, 64)
+        assert g == 64 and padded == 128          # NOT g=1
+        assert M.group_shape(61, 16) == (16, 64)
+        assert M.group_shape(64, 64) == (64, 64)  # divisible: no padding
+        assert M.group_shape(3, 64) == (3, 3)     # fewer tokens than a group
+
+    def test_prime_token_count_matches_single_group(self, rng):
+        """With generous capacity (no drops) each token's output is
+        independent of its group-mates, so grouped+padded routing must be
+        bit-exact vs one big group."""
+        cfg = M.MoEConfig(d_model=32, d_ff=64, num_experts=4, top_k=2,
+                          capacity_factor=8.0, group_size=16,
+                          impl="grouped", expert_kind="gelu")
+        params = M.init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        x = jnp.asarray(rng.normal(size=(1, 61, 32)), jnp.float32)  # prime
+        y1, _ = M.apply_moe(params, cfg, x)
+        y2, _ = M.apply_moe(params, replace(cfg, group_size=61), x)
+        np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+
+    def test_padded_output_shape(self, rng):
+        cfg, params, _ = setup(rng)
+        x = jnp.asarray(rng.normal(size=(1, 37, 32)), jnp.float32)
+        y, aux = M.apply_moe(params, replace(cfg, group_size=8), x)
+        assert y.shape == x.shape
+        assert np.isfinite(np.asarray(y)).all() and np.isfinite(float(aux))
+
+
+class TestDispatchStats:
+    def test_return_stats_counts_assignments(self, rng):
+        cfg, params, x = setup(rng)
+        y, aux, counts = M.apply_moe(params, cfg, x, return_stats=True)
+        counts = np.asarray(counts)
+        assert counts.shape == (cfg.num_experts,)
+        # generous capacity: every (token, slot) assignment is dispatched
+        assert counts.sum() == x.shape[0] * x.shape[1] * cfg.top_k
+        y2, _ = M.apply_moe(params, cfg, x)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(y2))
+
+    def test_per_token_tasks_match_scalar_tasks(self, rng):
+        """A mixed-task batch routed with a per-sequence task vector must
+        reproduce each sequence's scalar-task output (continuous batching
+        correctness)."""
+        cfg = M.MoEConfig(d_model=32, d_ff=64, num_experts=4, top_k=2,
+                          num_tasks=2, capacity_factor=8.0, group_size=256,
+                          impl="grouped", expert_kind="gelu")
+        params = M.init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+        x = jnp.asarray(rng.normal(size=(4, 8, 32)), jnp.float32)
+        tasks = jnp.asarray([0, 1, 1, 0], jnp.int32)
+        y_mixed, _, counts = M.apply_moe(params, cfg, x, task_id=tasks,
+                                         return_stats=True)
+        assert np.asarray(counts).shape == (2, cfg.num_experts)
+        for t in (0, 1):
+            y_t, _ = M.apply_moe(params, cfg, x, task_id=t)
+            rows = np.asarray(tasks) == t
+            np.testing.assert_allclose(np.asarray(y_mixed)[rows],
+                                       np.asarray(y_t)[rows],
+                                       atol=1e-5, rtol=1e-5)

@@ -127,3 +127,54 @@ def test_chunked_prefill_recurrent_family():
                                                  prefill_chunk=4))
     np.testing.assert_array_equal(one.generate(prompts, 4),
                                   chk.generate(prompts, 4))
+
+
+def test_chunked_prefill_nondivisible_attention():
+    """s0 % chunk != 0 no longer silently degrades to one-shot prefill:
+    the final chunk is padded to the common shape and masked (logits read
+    at the last real position; padded K/V excluded by cache_len)."""
+    cfg = configs.get("llama3_2_1b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (2, 30), 0,
+                                 cfg.vocab_size)
+    one = ServingEngine(cfg, params, ServeConfig(max_len=64))
+    chk = ServingEngine(cfg, params, ServeConfig(max_len=64,
+                                                 prefill_chunk=8))
+    np.testing.assert_array_equal(one.generate(prompts, 6),
+                                  chk.generate(prompts, 6))
+    # the padded-final-chunk step compiled (mid+last), not one-shot:
+    assert chk._chunk_steps, "chunked path was not taken"
+
+
+def test_chunked_prefill_nondivisible_recurrent():
+    """Recurrent archs run the exact remainder chunk (padding would
+    pollute the carried state)."""
+    cfg = configs.get("xlstm_350m", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(9), (1, 13), 0,
+                                 cfg.vocab_size)
+    one = ServingEngine(cfg, params, ServeConfig(max_len=64))
+    chk = ServingEngine(cfg, params, ServeConfig(max_len=64,
+                                                 prefill_chunk=4))
+    np.testing.assert_array_equal(one.generate(prompts, 4),
+                                  chk.generate(prompts, 4))
+
+
+def test_chunked_prefill_task_switch_not_stale():
+    """Chunk steps are cached per task: serving task 1 after task 0 must
+    not reuse task 0's gate (regression: the old cache ignored task_id)."""
+    from dataclasses import replace
+
+    cfg = configs.get("kimi_k2_1t_a32b", smoke=True)
+    cfg = replace(cfg, moe=replace(cfg.moe, num_tasks=2))
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    prompts = jax.random.randint(jax.random.PRNGKey(10), (1, 24), 0,
+                                 cfg.vocab_size)
+    chk = ServingEngine(cfg, params, ServeConfig(max_len=64,
+                                                 prefill_chunk=8))
+    out0 = chk.generate(prompts, 4, task_id=0)   # populates task-0 cache
+    out1 = chk.generate(prompts, 4, task_id=1)
+    ref1 = ServingEngine(cfg, params, ServeConfig(max_len=64)).generate(
+        prompts, 4, task_id=1)
+    np.testing.assert_array_equal(out1, ref1)
+    assert set(chk._chunk_steps) == {0, 1}
