@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
+from repro.ops import policy_named
 
 
 def timeit(fn, *args, reps=3, warmup=1):
@@ -42,17 +43,18 @@ def vit_encoder_config(name, layers, hidden, mlp, heads,
     """A ViT-style encoder config (non-causal trunk, GELU MLP, layernorm).
 
     ``optimized=False``: the paper's baseline — naive O(N²)-materialized
-    attention, exact erf GELU.  ``optimized=True``: techniques ①②③④ —
-    blocked streaming attention with online softmax, LUT GELU, unified
-    linear path.
+    attention, exact erf GELU (the ``"xla"`` compute policy).
+    ``optimized=True``: techniques ①②③④ — blocked streaming attention with
+    online softmax, LUT GELU, unified linear path (the ``"blocked"``
+    policy, attention tile pinned to the paper-scale block_k=128).
     """
+    policy = policy_named("blocked").with_tiles("attention", block_k=128) \
+        if optimized else policy_named("xla")
     return ArchConfig(
         name=name, family="vit-moe", num_layers=layers, d_model=hidden,
         num_heads=heads, num_kv_heads=heads, d_ff=mlp, vocab_size=0,
         block_pattern=("attn_mlp",), mlp_kind="gelu", norm="layernorm",
         rope="none", embed_input="embeddings",
-        attn_impl="blocked" if optimized else "naive",
-        attn_block_k=128,
-        use_lut_activation=optimized,
+        policy=policy,
         remat=False,
     )

@@ -1,0 +1,234 @@
+"""Tile-schedule autotuner for the ``repro.ops`` registry.
+
+Full mode sweeps candidate block sizes per (op, shape bucket) on the current
+backend, times each with the shared harness, and emits a schedule table in
+the ``repro/ops/schedules.json`` format (``--out`` writes it; review + copy
+over the shipped table to ship new measurements).  The shipped table is the
+last blessed sweep — model code never retunes at run time.
+
+``--smoke`` is the CI guard (~seconds, budget 30s): it validates that the
+shipped table loads, covers every registered op that has a tunable
+(``pallas``) implementation, and actually *drives* dispatch — one tiny call
+per op under a ``pallas`` policy must resolve its blocks from the table and
+hit (or reasoned-fallback through) the registry.  The resulting
+``ops.dispatch_report()`` is written to ``DISPATCH_REPORT_JSON`` (default
+``benchmarks/out/ops_dispatch_report.json``) for upload as a CI artifact.
+
+Usage:
+  PYTHONPATH=src python -m benchmarks.ops_autotune [--smoke] [--out F]
+                                                   [--only OP] [--reps N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import itertools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import ops
+from repro.core import attention as A
+from repro.core.unified_linear import unified_linear
+from repro.kernels import ops as kops
+from repro.ops import schedules
+
+REPORT_PATH = os.environ.get(
+    "DISPATCH_REPORT_JSON",
+    os.path.join(os.path.dirname(__file__), "out", "ops_dispatch_report.json"))
+
+# ------------------------------------------------------------------ sweeps
+#
+# Each entry: op -> (shape buckets, candidate block grids, measure fn).
+# Shapes are kept modest so a full sweep stays minutes on CPU interpret;
+# on TPU the same sweep measures the Mosaic kernels.
+
+
+def _rng(*shape):
+    return jnp.asarray(np.random.default_rng(0).normal(size=shape),
+                       jnp.float32)
+
+
+def _measure_attention(dims, blocks, reps):
+    q = _rng(1, 4, dims["sq"], dims["d"])
+    k = _rng(1, 4, dims["skv"], dims["d"])
+    v = _rng(1, 4, dims["skv"], dims["d"])
+    return timeit(lambda: kops.flash_attention(q, k, v, **blocks), reps=reps)
+
+
+def _measure_linear(dims, blocks, reps):
+    x = _rng(dims["m"], dims["k"])
+    w = _rng(dims["k"], dims["n"])
+    return timeit(lambda: kops.unified_linear(x, w, **blocks), reps=reps)
+
+
+def _measure_moe(dims, blocks, reps):
+    buf = _rng(dims["e"], dims["c"], dims["d"])
+    w = _rng(dims["e"], dims["d"], dims["f"])
+    sizes = jnp.full((dims["e"],), dims["c"], jnp.int32)
+    return timeit(lambda: kops.moe_gemm(buf, w, sizes, **blocks), reps=reps)
+
+
+def _measure_activation(dims, blocks, reps):
+    x = _rng(dims["rows"] * 128)
+    return timeit(lambda: kops.lut_activation(x, "gelu", **blocks), reps=reps)
+
+
+def _measure_blocked_attention(dims, blocks, reps):
+    q = _rng(1, 4, dims["sq"], dims["d"])
+    k = _rng(1, 4, dims["skv"], dims["d"])
+    v = _rng(1, 4, dims["skv"], dims["d"])
+    fn = jax.jit(lambda q, k, v: A.blocked_attention(q, k, v, **blocks))
+    return timeit(fn, q, k, v, reps=reps)
+
+
+SWEEPS = {
+    "attention.pallas": dict(
+        buckets=[{"sq": 128, "skv": 128, "d": 64},
+                 {"sq": 512, "skv": 512, "d": 64}],
+        grid={"block_q": (32, 64, 128), "block_k": (32, 64, 128)},
+        measure=_measure_attention),
+    "attention.blocked": dict(
+        buckets=[{"sq": 128, "skv": 128, "d": 64},
+                 {"sq": 256, "skv": 1024, "d": 64}],
+        grid={"block_k": (64, 128, 256, 512)},
+        measure=_measure_blocked_attention),
+    "linear.pallas": dict(
+        buckets=[{"m": 128, "n": 256, "k": 256},
+                 {"m": 512, "n": 512, "k": 512}],
+        grid={"block_m": (64, 128, 256), "block_n": (128, 256),
+              "block_k": (128, 256)},
+        measure=_measure_linear),
+    "moe_grouped_gemm.pallas": dict(
+        buckets=[{"e": 8, "c": 64, "d": 128, "f": 256}],
+        grid={"block_c": (32, 64, 128), "block_f": (128, 256),
+              "block_k": (128,)},
+        measure=_measure_moe),
+    "activation.pallas": dict(
+        buckets=[{"rows": 512}],
+        grid={"block_rows": (128, 256, 512)},
+        measure=_measure_activation),
+}
+
+
+def sweep(only=None, reps=3):
+    rows = []
+    table = {"version": 1, "backends": {schedules.backend_key(): {}}}
+    section = table["backends"][schedules.backend_key()]
+    for key, spec in SWEEPS.items():
+        if only and only not in key:
+            continue
+        names = sorted(spec["grid"])
+        entry = {"defaults": None, "buckets": []}
+        for dims in spec["buckets"]:
+            best, best_t = None, float("inf")
+            for combo in itertools.product(*(spec["grid"][n] for n in names)):
+                blocks = dict(zip(names, combo))
+                try:
+                    t = spec["measure"](dims, blocks, reps)
+                except Exception as e:  # illegal tiling for this shape
+                    print(f"  {key} {dims} {blocks}: skipped ({e})",
+                          file=sys.stderr)
+                    continue
+                if t < best_t:
+                    best, best_t = blocks, t
+            if best is None:
+                continue
+            rows.append((f"ops_autotune/{key}/" +
+                         "x".join(str(v) for v in dims.values()),
+                         best_t * 1e6,
+                         ";".join(f"{k}={v}" for k, v in best.items())))
+            if entry["defaults"] is None:
+                entry["defaults"] = best
+            else:
+                entry["buckets"].append({"min": dims, **best})
+        if entry["defaults"] is not None:
+            section[key] = entry
+    return rows, table
+
+
+# ------------------------------------------------------------------ smoke
+
+
+def smoke():
+    """Validate the shipped table + prove it drives real dispatches."""
+    # 1. table loads and covers every op with a tunable (pallas) impl
+    matrix = ops.capability_matrix()
+    missing = []
+    for op, impls in matrix.items():
+        if "pallas" not in impls:
+            continue
+        blocks = ops.schedule_for(op, "pallas", {}, backend="interpret")
+        if not blocks or not all(isinstance(v, int) for v in blocks.values()):
+            missing.append(op)
+    if missing:
+        raise SystemExit(f"schedule table missing interpret entries for: "
+                         f"{missing}")
+
+    # 2. one tiny dispatch per op under a pallas policy: the table resolves
+    #    blocks and the registry accounts for the request (hit or reasoned
+    #    fallback — e.g. a vector cache_len decode)
+    ops.reset_dispatch_report()
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(1, 2, 16, 16)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(8, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 16)), jnp.float32)
+    buf = jnp.asarray(rng.normal(size=(2, 8, 16)), jnp.float32)
+    we = jnp.asarray(rng.normal(size=(2, 16, 16)), jnp.float32)
+    with ops.use_policy(ops.policy_named("pallas")):
+        A.attention(q, q, q)
+        A.decode_attention(q[:, :, :1], q, q, jnp.full((1,), 8, jnp.int32))
+        unified_linear(x, w, activation="gelu")
+        ops.dispatch("moe_grouped_gemm", buf, we,
+                     jnp.asarray([4, 8], jnp.int32))
+        ops.apply_activation(x, "silu")
+    report = ops.dispatch_report()
+    uncovered = [op for op in matrix if op not in report]
+    if uncovered:
+        raise SystemExit(f"ops never dispatched in smoke: {uncovered}")
+    for op, entry in report.items():
+        hits = sum(entry["hits"].values())
+        fbs = sum(f["count"] for f in entry["fallbacks"])
+        if hits + fbs != entry["requests"]:
+            raise SystemExit(f"unaccounted dispatches for {op}: {entry}")
+
+    os.makedirs(os.path.dirname(REPORT_PATH), exist_ok=True)
+    with open(REPORT_PATH, "w") as f:
+        json.dump({"capability_matrix": matrix, "dispatch_report": report},
+                  f, indent=2)
+    print(f"[ops_autotune] smoke OK: {len(matrix)} ops, "
+          f"{sum(len(v) for v in matrix.values())} impls, "
+          f"report -> {REPORT_PATH}")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="validate the shipped schedule table (CI guard)")
+    ap.add_argument("--out", default=None,
+                    help="write the measured table JSON here")
+    ap.add_argument("--only", default=None, help="sweep only matching ops")
+    ap.add_argument("--reps", type=int, default=3)
+    args = ap.parse_args()
+    if args.smoke:
+        return smoke()
+    rows, table = sweep(only=args.only, reps=args.reps)
+    from benchmarks.common import emit
+
+    emit(rows)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+        print(f"[ops_autotune] wrote {args.out}", file=sys.stderr)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+"""Compute-policy benchmark: M³ViT forward throughput per kernel policy.
+
+Runs the paper's own multi-task model end-to-end under three compute
+policies — ``xla`` (naive attention + exact activations, the unoptimized
+baseline), ``blocked`` (streaming attention + LUT activations, the seed
+default), and ``pallas-interpret`` (every op through the Pallas kernels; on
+this CPU container they execute in interpret mode, so the number is a
+*plumbing* trajectory, not kernel speed — on TPU the same policy lowers to
+Mosaic) — and reports tokens/s plus the dispatch report proving which impl
+served each op.
+
+Emits CSV rows through the harness and a JSON artifact
+(``BENCH_OPS_JSON`` overrides the path) alongside ``serve_throughput``.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import configs, ops
+from repro.models import vit
+
+JSON_PATH = os.environ.get(
+    "BENCH_OPS_JSON",
+    os.path.join(os.path.dirname(__file__), "out", "ops_dispatch.json"))
+
+POLICIES = ("xla", "blocked", "pallas")
+
+
+def run(quick=False):
+    cfg = configs.get("m3vit")
+    if quick:
+        cfg = replace(cfg, num_layers=4)
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    img = jax.random.normal(jax.random.PRNGKey(1), (1, 128, 256, 3))
+    tokens = 128  # patches per image (128x256 / 16x16)
+
+    rows = []
+    artifact = {"model": "m3vit", "quick": quick, "policies": {}}
+    ref_out = None
+    for name in POLICIES:
+        pcfg = replace(cfg, policy=ops.policy_named(name))
+        fwd = jax.jit(lambda p, x, c=pcfg: vit.forward(p, x, c, "semseg")[0])
+        ops.reset_dispatch_report()
+        t = timeit(fwd, params, img, reps=2 if name == "pallas" else 3)
+        report = ops.dispatch_report()
+        out = np.asarray(fwd(params, img), np.float32)
+        if ref_out is None:
+            ref_out = out
+        dev = float(np.max(np.abs(out - ref_out)))
+        toks = tokens / t
+        label = "pallas-interpret" if name == "pallas" else name
+        rows.append((f"ops_dispatch/m3vit_{label}", t * 1e6,
+                     f"tok_s={toks:.1f};max_dev={dev:.2e}"))
+        artifact["policies"][label] = {
+            "seconds_per_forward": t,
+            "tokens_per_s": toks,
+            "max_dev_vs_xla": dev,
+            "dispatch_report": report,
+        }
+
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(artifact, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(quick=True))

@@ -5,6 +5,9 @@
   table4_efficiency  — Table IV  (energy efficiency, measured + projected)
   table5_ablation    — Table V   (cumulative technique ablation on M³ViT)
   fig12_breakdown    — Fig. 12   (per-component latency/cost breakdown)
+  serve_throughput   — continuous batching vs static serving
+  ops_dispatch       — M³ViT tokens/s per compute policy (xla / blocked /
+                       pallas-interpret), JSON artifact w/ dispatch report
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 Emits ``name,us_per_call,derived`` CSV.
@@ -17,7 +20,8 @@ import traceback
 from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
-           "table5_ablation", "fig12_breakdown", "serve_throughput"]
+           "table5_ablation", "fig12_breakdown", "serve_throughput",
+           "ops_dispatch"]
 
 
 def main() -> int:

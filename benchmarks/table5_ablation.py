@@ -35,16 +35,19 @@ PAPER = [
 
 
 def variants(cfg):
-    base = replace(cfg, attn_impl="naive", use_lut_activation=False,
+    from repro.ops import policy_named
+
+    xla, blocked = policy_named("xla"), policy_named("blocked")
+    base = replace(cfg, policy=xla,
                    moe=replace(cfg.moe, impl="onehot"), remat=False)
     v1 = replace(base, moe=replace(base.moe, impl="grouped"))
     v2 = v1                                   # single-pass softmax: the carry
     # algebra is inside blocked attention; standalone it equals jax softmax,
     # so the latency step lands in v5 — accuracy tracked from here
-    v3 = replace(v1, use_lut_activation=True)
+    v3 = replace(v1, policy=xla.with_impls(activation="lut"))
     v4 = v3                                   # unified linear is the only
     # linear path in this codebase (technique ④ is structural)
-    v5 = replace(v3, attn_impl="blocked", attn_block_k=64)
+    v5 = replace(v3, policy=blocked.with_tiles("attention", block_k=64))
     return [("baseline", base), ("expert_reorder", v1),
             ("singlepass_softmax", v2), ("lut_gelu", v3),
             ("unified_linear", v4), ("attn_reorder", v5)]

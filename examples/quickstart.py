@@ -50,7 +50,7 @@ def main():
     from repro.core.unified_linear import unified_linear
     xw = jnp.asarray(rng.normal(size=(128, 192)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(192, 768)), jnp.float32)
-    y = unified_linear(xw, w, activation="gelu", use_lut=True)
+    y = unified_linear(xw, w, activation="gelu")  # LUT via the default policy
     print(f"④ unified linear: fused GEMM+bias+LUT-GELU -> {y.shape}")
 
     # ⑤ expert-by-expert reordering — queues, metaqueue, weighted combine

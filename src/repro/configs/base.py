@@ -16,6 +16,8 @@ from typing import Optional
 
 import jax.numpy as jnp
 
+from repro.ops.policy import ComputePolicy
+
 __all__ = ["ArchConfig", "MoESpec", "Shape", "SHAPES", "get", "list_archs", "reduced"]
 
 
@@ -59,12 +61,13 @@ class ArchConfig:
     lru_width: int = 0             # 0 => d_model
     conv_width: int = 4
     mlstm_chunk: int = 256
-    # numerics / impl switches
+    # numerics / implementation selection: ONE compute policy instead of
+    # the old scattered kernel/LUT/attention-impl booleans.  None = the
+    # ambient repro.ops policy (registry defaults reproduce the seed
+    # behaviour: blocked attention, XLA GEMMs, LUT activations); a
+    # ComputePolicy here is scoped around the model's forward pass.
     dtype: str = "bfloat16"
-    attn_impl: str = "blocked"     # naive | blocked (paper technique #1)
-    attn_block_k: int = 512
-    use_lut_activation: bool = True   # paper technique #3
-    use_pallas: bool = False
+    policy: Optional[ComputePolicy] = None
     remat: bool = True
     # multi-task (m3vit)
     num_tasks: int = 1

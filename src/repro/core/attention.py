@@ -13,14 +13,21 @@ of the paper's "Pass 3" into the M'xV consumer.  The skewed/"missing outputs"
 bookkeeping of the FPGA pipeline disappears because the MXU consumes whole
 tiles; the reuse schedule is identical with the tile as the unit.
 
-This module is the pure-jnp implementation used by every model (and as the
-oracle for the Pallas kernel in ``kernels/flash_attention.py``):
+This module holds the pure-jnp implementations used by every model (and as
+oracles for the Pallas kernel in ``kernels/flash_attention.py``):
 
   * ``naive_attention``    — materializes the N x N score matrix (the paper's
                              "without reordering" baseline).
   * ``blocked_attention``  — streams K/V in blocks with (m, l, acc) carries.
   * ``decode_attention``   — one new query against a KV cache (serve path).
   * ``bandwidth_model``    — Table II closed forms, used by tests/benchmarks.
+
+``attention`` and ``decode_attention`` are *dispatchers*: which
+implementation runs (``"xla"`` naive / ``"blocked"`` / ``"pallas"`` /
+``"ref"``) is decided by the ambient :mod:`repro.ops` compute policy via the
+capability-checked registry — model code passes no impl-selection flags, and
+any fallback (e.g. a traced chunk offset rejecting the kernel) is recorded
+in ``ops.dispatch_report()``.
 
 Supports GQA (kv heads broadcast over query-head groups), causal masking and
 sliding-window (local) attention — the latter for RecurrentGemma's 1-in-3
@@ -39,6 +46,7 @@ __all__ = [
     "naive_attention",
     "blocked_attention",
     "decode_attention",
+    "decode_attention_xla",
     "attention",
     "bandwidth_model",
 ]
@@ -168,7 +176,8 @@ def blocked_attention(
     return out.reshape(b, hq, sq, d).astype(q.dtype)
 
 
-def decode_attention(q, k_cache, v_cache, cache_len, *, window=None, scale=None):
+def decode_attention_xla(q, k_cache, v_cache, cache_len, *, window=None,
+                         scale=None):
     """One-token decode: q (B, Hq, 1, D) vs cache (B, Hkv, Smax, D).
 
     ``cache_len`` (B,) int32 — number of valid entries per sequence.  The new
@@ -201,19 +210,34 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, window=None, scale=None)
     return out.astype(q.dtype)
 
 
-def attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None,
-              impl: str = "blocked", block_k: int = 512, use_pallas: bool = False):
-    """Dispatch: 'naive' | 'blocked' (paper technique #1) | pallas kernel."""
-    if use_pallas:
-        from repro.kernels import ops as _kops
+def attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):
+    """Policy-dispatched attention (op ``"attention"``).
 
-        return _kops.flash_attention(q, k, v, causal=causal, window=window,
-                                     q_offset=q_offset, scale=scale)
-    if impl == "naive":
-        return naive_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset, scale=scale)
-    return blocked_attention(q, k, v, causal=causal, window=window,
-                             q_offset=q_offset, scale=scale, block_k=block_k)
+    The ambient :class:`repro.ops.ComputePolicy` names the implementation
+    (``"xla"`` | ``"blocked"`` | ``"pallas"`` | ``"ref"``) and the schedule
+    table supplies the block sizes; ``window``/``q_offset``/non-causal
+    combinations reach whichever impl the policy names (parity-tested
+    against the ``ref.py`` oracle for all of them).
+    """
+    from repro.ops.registry import dispatch
+
+    return dispatch("attention", q, k, v, causal=causal, window=window,
+                    q_offset=q_offset, scale=scale)
+
+
+def decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                     scale=None):
+    """Policy-dispatched single-token decode (op ``"attention_decode"``).
+
+    Serve backends pick the implementation per step from the same policy as
+    prefill; the Pallas impl requires a uniform concrete ``cache_len`` (the
+    continuous-batching per-slot vector is traced, so it falls back to the
+    ``"xla"`` pass with the reason recorded in the dispatch report).
+    """
+    from repro.ops.registry import dispatch
+
+    return dispatch("attention_decode", q, k_cache, v_cache, cache_len,
+                    window=window, scale=scale)
 
 
 @dataclass(frozen=True)

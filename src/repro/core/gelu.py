@@ -144,7 +144,10 @@ def lut_silu(x, **kw):
 
 
 def get_activation(name: str, use_lut: bool = False):
-    """Activation dispatch used by the unified linear layer epilogue."""
+    """Explicit exact-vs-LUT selection.  Model code does not call this —
+    it goes through the policy-dispatched ``repro.ops.apply_activation``
+    (op ``"activation"``: "xla" exact | "lut" | "pallas" LUT kernel);
+    this helper remains for oracles and deliberate pinning in tests."""
     if name in (None, "none", "identity"):
         return lambda x: x
     if name == "relu":

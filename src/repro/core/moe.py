@@ -5,8 +5,10 @@ through the unified linear module.  Two expert-compute paths, mathematically
 identical at equal capacity:
 
   * ``impl="grouped"`` — gather tokens into per-expert buffers and run a
-    grouped GEMM (the paper's expert-by-expert sweep; Pallas kernel when
-    ``use_pallas``).  Best on a single device / small device counts.
+    grouped GEMM (the paper's expert-by-expert sweep; the GEMM is the
+    ``"moe_grouped_gemm"`` op of the :mod:`repro.ops` registry, so the
+    Pallas kernel is one policy away).  Best on a single device / small
+    device counts.
   * ``impl="onehot"``  — dense one-hot dispatch/combine einsums (GShard
     style).  Lowers to clean dots + all-to-alls under GSPMD; used by the
     512-chip dry-run.
@@ -52,8 +54,6 @@ class MoEConfig:
     group_size: int = 4096         # tokens routed per independent group
     impl: str = "grouped"          # "grouped" | "onehot"
     renormalize: bool = True
-    use_lut: bool = False          # LUT activation (paper technique #3)
-    use_pallas: bool = False
 
     def capacity(self, tokens_per_group: int) -> int:
         c = int(tokens_per_group * self.top_k * self.capacity_factor
@@ -111,24 +111,23 @@ def _expert_ffn(params, cfg: MoEConfig, buf: jax.Array,
                 group_sizes: jax.Array | None = None) -> jax.Array:
     """Apply every expert's MLP to its buffer: (E, C, d) -> (E, C, d).
 
-    One einsum per projection = the grouped GEMM; expert e's weights are used
-    exactly once for its whole queue (the paper's weight-reuse guarantee).
-    With ``use_pallas`` the grouped GEMM is the Pallas ``moe_gemm`` kernel,
-    whose scalar-prefetch ``group_sizes`` realize the metaqueue skip.
+    Each projection is one ``"moe_grouped_gemm"`` dispatch — expert e's
+    weights are used exactly once for its whole queue (the paper's
+    weight-reuse guarantee).  Under a ``pallas`` policy the grouped GEMM is
+    the Pallas ``moe_gemm`` kernel, whose scalar-prefetch ``group_sizes``
+    realize the metaqueue skip; the activation is policy-dispatched too
+    (exact / LUT / LUT-kernel).
     """
     act = "silu" if cfg.expert_kind == "swiglu" else "gelu"
-    from repro.core.gelu import get_activation
+    from repro.ops import apply_activation
+    from repro.ops.registry import dispatch
 
-    a = get_activation(act, cfg.use_lut)
-    if cfg.use_pallas and group_sizes is not None:
-        from repro.kernels import ops as _kops
+    def a(x):
+        return apply_activation(x, act)
 
-        def gemm(x, w):
-            return _kops.moe_gemm(x, w, group_sizes).astype(jnp.float32)
-    else:
-        def gemm(x, w):
-            return jnp.einsum("ecd,edf->ecf", x, w,
-                              preferred_element_type=jnp.float32)
+    def gemm(x, w):
+        return dispatch("moe_grouped_gemm", x, w, group_sizes)
+
     if cfg.expert_kind == "swiglu":
         g = gemm(buf, params["wg"])
         u = gemm(buf, params["wu"])
@@ -276,8 +275,8 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0,
 
     if cfg.num_shared_experts:
         with jax.named_scope("moe_shared"):
-            gshared = unified_linear(x, params["shared_wg"], activation="silu",
-                                     use_lut=cfg.use_lut)
+            gshared = unified_linear(x, params["shared_wg"],
+                                     activation="silu")
             ushared = unified_linear(x, params["shared_wu"])
             y = y + unified_linear((gshared * ushared).astype(x.dtype),
                                    params["shared_wd"])
@@ -395,8 +394,8 @@ def apply_moe_ep_local(params, cfg: MoEConfig, x: jax.Array, mesh,
 
     if cfg.num_shared_experts:
         with jax.named_scope("moe_shared"):
-            gshared = unified_linear(x, params["shared_wg"], activation="silu",
-                                     use_lut=cfg.use_lut)
+            gshared = unified_linear(x, params["shared_wg"],
+                                     activation="silu")
             ushared = unified_linear(x, params["shared_wu"])
             y = y + unified_linear((gshared * ushared).astype(x.dtype),
                                    params["shared_wd"])

@@ -10,20 +10,23 @@ flexible compute module with run-time configuration:
   * weighted accumulation onto an existing output buffer (MoE combine),
   * a widened bias datatype covering the range/precision of all callers.
 
-On TPU the resource argument (share DSPs/LUTs) becomes a *code-path and
-schedule* argument: one blocked GEMM kernel = one tuned tile schedule reused
-everywhere, epilogue fusion (bias+activation) avoids an extra HBM round trip,
-and the widened bias maps to f32 bias/accumulator with bf16 weights.  Every
-model in this repo funnels its projections through :func:`unified_linear`, so
-enabling the Pallas kernel or changing the precision policy is one switch.
+On TPU the resource argument (share DSPs/LUTs) becomes a *policy* argument:
+the GEMM itself is the logical op ``"linear"`` in the :mod:`repro.ops`
+registry, so which implementation runs (``"xla"`` matmul, ``"pallas"``
+blocked-GEMM kernel with fused bias+LUT epilogue, ``"ref"`` oracle), the
+accumulation dtype, and the widened f32 bias all come from the ambient
+:class:`~repro.ops.ComputePolicy` — no per-call flags.  The sparse gather
+and the weighted accumulate stay here as pre/post stages around whichever
+GEMM impl the policy names, so the kernel path is no longer silently
+dropped for ``ndim != 2`` or ``accum_out`` calls (the old behaviour): the
+leading dims are flattened inside the kernel wrapper, and any genuine
+capability miss lands in ``ops.dispatch_report()``.
 """
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-
-from repro.core.gelu import get_activation
 
 __all__ = ["unified_linear", "sparse_linear", "Linear"]
 
@@ -34,34 +37,29 @@ def unified_linear(
     b: jax.Array | None = None,
     *,
     activation: str | None = None,
-    use_lut: bool = False,
     token_index: jax.Array | None = None,
     accum_out: jax.Array | None = None,
     accum_weight: jax.Array | None = None,
-    use_pallas: bool = False,
-    preferred_dtype=jnp.float32,
+    preferred_dtype=None,
 ) -> jax.Array:
     """y = act(x @ w + b), with optional sparse gather / weighted accumulate.
 
     x: (..., T, in_dim); w: (in_dim, out_dim); b: (out_dim,) kept in f32 (the
-    "widened bias type").  When ``token_index`` (T',) is given, rows are
-    gathered from x before the GEMM (the indirect/sparse reader of the paper).
-    When ``accum_out``/``accum_weight`` are given, the result is scaled by the
-    per-token weight and added onto the existing buffer (the indirect writer's
-    weighted accumulation used by MoE combine).
+    "widened bias type", per policy).  When ``token_index`` (T',) is given,
+    rows are gathered from x before the GEMM (the indirect/sparse reader of
+    the paper).  When ``accum_out``/``accum_weight`` are given, the result is
+    scaled by the per-token weight and added onto the existing buffer (the
+    indirect writer's weighted accumulation used by MoE combine).
+
+    ``preferred_dtype`` overrides the policy's accumulation dtype for this
+    call (the f32-logits heads); None defers to the policy.
     """
+    from repro.ops.registry import dispatch
+
     if token_index is not None:
         x = jnp.take(x, token_index, axis=-2)
-    if use_pallas and x.ndim == 2 and accum_out is None:
-        from repro.kernels import ops as _kops
-
-        y = _kops.unified_linear(x, w, b, activation=activation, use_lut=use_lut)
-    else:
-        y = jnp.matmul(x, w, preferred_element_type=preferred_dtype)
-        if b is not None:
-            y = y + b.astype(preferred_dtype)
-        y = get_activation(activation, use_lut)(y)
-        y = y.astype(x.dtype)
+    y = dispatch("linear", x, w, b, activation=activation,
+                 preferred_dtype=preferred_dtype)
     if accum_out is not None:
         scaled = y if accum_weight is None else y * accum_weight[..., None].astype(y.dtype)
         if token_index is not None:

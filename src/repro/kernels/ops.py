@@ -5,6 +5,14 @@ of 128 on matmul dims), invokes the raw ``*_call``, and slices the result.
 On this CPU container kernels execute in ``interpret=True`` mode (the kernel
 body runs as traced Python — bit-faithful to the TPU schedule, used by the
 allclose tests); on a TPU backend they compile to Mosaic.
+
+Model code does not call these directly: they are the ``"pallas"``
+implementations behind the :mod:`repro.ops` registry, selected by the
+ambient :class:`~repro.ops.ComputePolicy`.  Block sizes default to ``None``
+= *resolve from the measured tile-schedule table*
+(``repro/ops/schedules.json``, per op × shape bucket × backend, populated
+by ``benchmarks/ops_autotune.py``); an explicit ``block_*=`` argument
+pins them (kernel sweeps / the autotuner itself).
 """
 
 from __future__ import annotations
@@ -21,6 +29,7 @@ from repro.kernels import flash_attention as _fa
 from repro.kernels import gelu_lut as _gl
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import unified_linear as _ul
+from repro.ops.schedules import schedule_for
 
 __all__ = ["flash_attention", "unified_linear", "moe_gemm", "lut_activation"]
 
@@ -39,6 +48,13 @@ def _pad_to(x, mult: int, axis: int):
     return jnp.pad(x, widths)
 
 
+def _blocks(op: str, dims: dict, given: dict) -> dict:
+    """Merge schedule-table blocks with explicitly pinned ones (non-None)."""
+    out = schedule_for(op, "pallas", dims)
+    out.update({k: v for k, v in given.items() if v is not None})
+    return out
+
+
 # ------------------------------------------------------------ attention
 
 
@@ -47,7 +63,7 @@ def _pad_to(x, mult: int, axis: int):
     static_argnames=("causal", "window", "q_offset", "scale", "block_q", "block_k"),
 )
 def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
-                    scale=None, block_q=128, block_k=128):
+                    scale=None, block_q=None, block_k=None):
     """Tiled flash attention (paper technique ①+②).
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
@@ -55,8 +71,10 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     b, hq, sq, d = q.shape
     skv = k.shape[2]
     scale = scale if scale is not None else 1.0 / math.sqrt(d)
-    bq = min(block_q, max(8, 1 << (sq - 1).bit_length()))
-    bk = min(block_k, max(8, 1 << (skv - 1).bit_length()))
+    sched = _blocks("attention", {"sq": sq, "skv": skv, "d": d},
+                    {"block_q": block_q, "block_k": block_k})
+    bq = min(sched.get("block_q", 128), max(8, 1 << (sq - 1).bit_length()))
+    bk = min(sched.get("block_k", 128), max(8, 1 << (skv - 1).bit_length()))
     qp = _pad_to(q, bq, 2)
     kp = _pad_to(k, bk, 2)
     vp = _pad_to(v, bk, 2)
@@ -77,10 +95,12 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("activation", "use_lut", "block_m", "block_n", "block_k"),
+    static_argnames=("activation", "use_lut", "step_log2", "lut_range",
+                     "block_m", "block_n", "block_k"),
 )
 def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
-                   block_m=256, block_n=256, block_k=512):
+                   step_log2=-8, lut_range=8.0,
+                   block_m=None, block_n=None, block_k=None):
     """One blocked GEMM for every linear layer (technique ④, fused ③).
 
     x: (..., K); w: (K, N); b: (N,) f32 or None.  Leading dims are flattened
@@ -91,16 +111,21 @@ def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
     n = w.shape[1]
     x2 = x.reshape(-1, kdim)
     m = x2.shape[0]
-    bm = min(block_m, max(8, 1 << (m - 1).bit_length()))
-    bn = min(block_n, max(128, 1 << (n - 1).bit_length()))
-    bk = min(block_k, max(128, 1 << (kdim - 1).bit_length()))
+    sched = _blocks("linear", {"m": m, "n": n, "k": kdim},
+                    {"block_m": block_m, "block_n": block_n,
+                     "block_k": block_k})
+    bm = min(sched.get("block_m", 256), max(8, 1 << (m - 1).bit_length()))
+    bn = min(sched.get("block_n", 256), max(128, 1 << (n - 1).bit_length()))
+    bk = min(sched.get("block_k", 512), max(128, 1 << (kdim - 1).bit_length()))
     xp = _pad_to(_pad_to(x2, bm, 0), bk, 1)
     wp = _pad_to(_pad_to(w, bk, 0), bn, 1)
     bp = None if b is None else _pad_to(b.astype(jnp.float32), bn, 0)
-    table = jnp.asarray(_cached_table(activation or "gelu", -8, 8.0)) \
+    table = jnp.asarray(
+        _cached_table(activation or "gelu", step_log2, lut_range)) \
         if activation in ("gelu", "silu") else jnp.zeros((8,), jnp.float32)
     y = _ul.unified_linear_call(
         xp, wp, bp, table, activation=activation, use_lut=use_lut,
+        step_log2=step_log2,
         block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
     return y[:m, :n].reshape(*lead, n)
 
@@ -109,7 +134,7 @@ def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
 
 
 @functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k"))
-def moe_gemm(buf, w, group_sizes, *, block_c=128, block_f=256, block_k=512):
+def moe_gemm(buf, w, group_sizes, *, block_c=None, block_f=None, block_k=None):
     """Expert-by-expert grouped GEMM (technique ⑤): out[e] = buf[e] @ w[e].
 
     buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 — experts with an
@@ -117,9 +142,12 @@ def moe_gemm(buf, w, group_sizes, *, block_c=128, block_f=256, block_k=512):
     """
     e, c, d = buf.shape
     f = w.shape[2]
-    bc = min(block_c, max(8, 1 << (c - 1).bit_length()))
-    bf = min(block_f, max(128, 1 << (f - 1).bit_length()))
-    bk = min(block_k, max(128, 1 << (d - 1).bit_length()))
+    sched = _blocks("moe_grouped_gemm", {"e": e, "c": c, "d": d, "f": f},
+                    {"block_c": block_c, "block_f": block_f,
+                     "block_k": block_k})
+    bc = min(sched.get("block_c", 128), max(8, 1 << (c - 1).bit_length()))
+    bf = min(sched.get("block_f", 256), max(128, 1 << (f - 1).bit_length()))
+    bk = min(sched.get("block_k", 512), max(128, 1 << (d - 1).bit_length()))
     bufp = _pad_to(_pad_to(buf, bc, 1), bk, 2)
     wp = _pad_to(_pad_to(w, bk, 1), bf, 2)
     out = _mg.moe_gemm_call(bufp, wp, group_sizes.astype(jnp.int32),
@@ -131,15 +159,20 @@ def moe_gemm(buf, w, group_sizes, *, block_c=128, block_f=256, block_k=512):
 # ------------------------------------------------------------ lut activation
 
 
-@functools.partial(jax.jit, static_argnames=("kind", "step_log2", "block_rows"))
-def lut_activation(x, kind="gelu", *, step_log2=-8, block_rows=256):
+@functools.partial(jax.jit, static_argnames=("kind", "step_log2", "lut_range",
+                                              "block_rows"))
+def lut_activation(x, kind="gelu", *, step_log2=-8, lut_range=8.0,
+                   block_rows=None):
     """Standalone LUT activation kernel (technique ③).  Elementwise."""
-    table = jnp.asarray(_cached_table(kind, step_log2, 8.0))
+    table = jnp.asarray(_cached_table(kind, step_log2, lut_range))
     flat = x.reshape(-1)
     n = flat.shape[0]
     lanes = 128
     rows = -(-n // lanes)
-    br = min(block_rows, max(8, 1 << max(rows - 1, 0).bit_length()))
+    sched = _blocks("activation", {"rows": rows},
+                    {"block_rows": block_rows})
+    br = min(sched.get("block_rows", 256),
+             max(8, 1 << max(rows - 1, 0).bit_length()))
     rows_p = -(-rows // br) * br
     xp = jnp.zeros((rows_p * lanes,), x.dtype).at[:n].set(flat)
     y = _gl.lut_activation_call(xp.reshape(rows_p, lanes), table,

@@ -49,14 +49,17 @@ def ref_attention(q, k, v, *, causal=True, window=None, q_offset=0, scale=None):
     return out.astype(q.dtype)
 
 
-def ref_linear(x, w, b=None, *, activation=None, use_lut=False):
+def ref_linear(x, w, b=None, *, activation=None, use_lut=False,
+               lut_step_log2=-8, lut_rng=8.0):
     """y = act(x @ w + b) with f32 accumulation; the unified-linear oracle."""
     y = jnp.matmul(x, w, preferred_element_type=jnp.float32)
     if b is not None:
         y = y + b.astype(jnp.float32)
     if activation is not None and activation != "none":
         lut = use_lut and activation in ("gelu", "silu")
-        y = ref_lut_activation(y, activation) if lut else _exact_act(y, activation)
+        y = ref_lut_activation(y, activation, step_log2=lut_step_log2,
+                               rng=lut_rng) if lut \
+            else _exact_act(y, activation)
     return y.astype(x.dtype)
 
 

@@ -75,7 +75,11 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         cfg = _rp(cfg, moe=_rp(cfg.moe, impl=variant["moe_impl"]))
     if variant.get("attn_block_k"):
         from dataclasses import replace as _rp
-        cfg = _rp(cfg, attn_block_k=variant["attn_block_k"])
+
+        from repro.ops.policy import ComputePolicy
+        pol = (cfg.policy or ComputePolicy()).with_tiles(
+            "attention", block_k=variant["attn_block_k"])
+        cfg = _rp(cfg, policy=pol)
     if variant.get("no_remat"):
         from dataclasses import replace as _rp
         cfg = _rp(cfg, remat=False)

@@ -107,15 +107,30 @@ def main() -> int:
                     help="scheduler mode: number of gating tasks")
     ap.add_argument("--resident-fraction", type=float, default=0.5,
                     help="vision scheduler: fraction of experts resident")
+    ap.add_argument("--policy", default=None,
+                    choices=["xla", "blocked", "pallas", "ref"],
+                    help="compute policy for every serving step (default: "
+                         "the arch config's policy)")
+    ap.add_argument("--dispatch-report", action="store_true",
+                    help="print ops.dispatch_report() after serving")
     args = ap.parse_args()
 
+    from repro.ops import dispatch_report, policy_named
+
     cfg = configs.get(args.arch, smoke=args.smoke)
+    policy = policy_named(args.policy) if args.policy else None
     scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
                        eos_id=args.eos_id, seed=args.seed,
-                       prefill_chunk=args.prefill_chunk)
+                       prefill_chunk=args.prefill_chunk, policy=policy)
 
     if args.scheduler and cfg.family == "vit-moe":
-        return _serve_scheduler_vision(cfg, args)
+        if policy is not None:
+            from dataclasses import replace
+            cfg = replace(cfg, policy=policy)
+        rc = _serve_scheduler_vision(cfg, args)
+        if args.dispatch_report:
+            print("[serve] dispatch report:", dispatch_report())
+        return rc
 
     key = jax.random.PRNGKey(args.seed)
     k_params, k_prompts = jax.random.split(key)   # independent init/data
@@ -125,9 +140,13 @@ def main() -> int:
         if scfg.temperature > 0:
             scfg = ServeConfig(max_len=scfg.max_len, eos_id=scfg.eos_id,
                                seed=scfg.seed,
-                               prefill_chunk=scfg.prefill_chunk)
+                               prefill_chunk=scfg.prefill_chunk,
+                               policy=scfg.policy)
             print("[serve] scheduler decodes greedily; ignoring temperature")
-        return _serve_scheduler_lm(cfg, params, scfg, args, k_prompts)
+        rc = _serve_scheduler_lm(cfg, params, scfg, args, k_prompts)
+        if args.dispatch_report:
+            print("[serve] dispatch report:", dispatch_report())
+        return rc
 
     engine = ServingEngine(cfg, params, scfg)
     if cfg.embed_input == "tokens":
@@ -143,6 +162,8 @@ def main() -> int:
     print(f"[serve] arch={cfg.name} generated {out.shape} in {dt:.2f}s "
           f"({args.batch*args.tokens/dt:.1f} tok/s)")
     print(out[: min(2, out.shape[0])])
+    if args.dispatch_report:
+        print("[serve] dispatch report:", dispatch_report())
     return 0
 
 

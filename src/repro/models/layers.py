@@ -1,9 +1,11 @@
 """Shared model building blocks.
 
-Every projection goes through the unified linear module (paper technique ④),
-attention goes through the blocked/streamed implementation (technique ①+②),
-and activations use the LUT approximation when the config enables it
-(technique ③).
+Every projection goes through the unified linear module (paper technique ④)
+and attention through the ``attention``/``decode_attention`` dispatchers
+(technique ①+②); *which* implementation serves each op — and whether
+activations use the LUT approximation (technique ③) — is decided by the
+ambient ``repro.ops`` compute policy (``cfg.policy``, scoped by
+``transformer.forward``), never by per-call flags.
 """
 
 from __future__ import annotations
@@ -132,18 +134,15 @@ def init_mlp(key, cfg: ArchConfig, dtype):
 
 @jax.named_scope("mlp")
 def apply_mlp(params, x, cfg: ArchConfig):
-    lut = cfg.use_lut_activation
     if cfg.mlp_kind in ("swiglu", "geglu"):
         act = "silu" if cfg.mlp_kind == "swiglu" else "gelu"
-        g = unified_linear(x, params["wg"], activation=act, use_lut=lut,
-                           use_pallas=cfg.use_pallas)
-        u = unified_linear(x, params["wu"], use_pallas=cfg.use_pallas)
+        g = unified_linear(x, params["wg"], activation=act)
+        u = unified_linear(x, params["wu"])
         h = constrain((g * u).astype(x.dtype), "btf")
-        return unified_linear(h, params["wd"], use_pallas=cfg.use_pallas)
-    h = unified_linear(x, params["w1"], params["b1"], activation="gelu",
-                       use_lut=lut, use_pallas=cfg.use_pallas)
+        return unified_linear(h, params["wd"])
+    h = unified_linear(x, params["w1"], params["b1"], activation="gelu")
     h = constrain(h, "btf")
-    return unified_linear(h, params["w2"], params["b2"], use_pallas=cfg.use_pallas)
+    return unified_linear(h, params["w2"], params["b2"])
 
 
 # ---------------------------------------------------------------- attention
@@ -183,9 +182,9 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
     b, s, _ = x.shape
     hq, hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
     with jax.named_scope("attn_qkv"):
-        q = unified_linear(x, params["wq"], params.get("bq"), use_pallas=cfg.use_pallas)
-        k = unified_linear(x, params["wk"], params.get("bk"), use_pallas=cfg.use_pallas)
-        v = unified_linear(x, params["wv"], params.get("bv"), use_pallas=cfg.use_pallas)
+        q = unified_linear(x, params["wq"], params.get("bq"))
+        k = unified_linear(x, params["wk"], params.get("bk"))
+        v = unified_linear(x, params["wv"], params.get("bv"))
         q = constrain(_split_heads(q, hq, hd), "bhsd")
         k = constrain(_split_heads(k, hkv, hd), "bkvsd")
         v = constrain(_split_heads(v, hkv, hd), "bkvsd")
@@ -243,13 +242,9 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
             kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
             new_cache = {"k": kc, "v": vc}
             o = attention(q, kc, vc, causal=causal, window=window,
-                          q_offset=cache_index, impl=cfg.attn_impl,
-                          block_k=cfg.attn_block_k,
-                          use_pallas=cfg.use_pallas)
+                          q_offset=cache_index)
         else:
-            o = attention(q, k, v, causal=causal, window=window,
-                          impl=cfg.attn_impl, block_k=cfg.attn_block_k,
-                          use_pallas=cfg.use_pallas)
+            o = attention(q, k, v, causal=causal, window=window)
             if cache is not None:
                 if ring and s > smax:
                     # prefill longer than the ring: keep the last `smax`
@@ -269,7 +264,7 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
     o = constrain(o, "bhsd")
     with jax.named_scope("attn_out"):
         o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
-        y = unified_linear(o, params["wo"], use_pallas=cfg.use_pallas)
+        y = unified_linear(o, params["wo"])
     return constrain(y, "btd"), new_cache
 
 
@@ -317,6 +312,6 @@ def apply_lm_head(head_params, embed_params, x, cfg: ArchConfig):
         w = embed_params["tokens"].T
         logits = jnp.matmul(x, w, preferred_element_type=jnp.float32)
     else:
-        logits = unified_linear(x, head_params["w"], use_pallas=cfg.use_pallas,
+        logits = unified_linear(x, head_params["w"],
                                 preferred_dtype=jnp.float32)
     return constrain(logits.astype(jnp.float32), "btv")

@@ -94,9 +94,8 @@ def apply_rglru(params, x, cfg: ArchConfig, state=None, decode=False):
     h = cfg.num_heads
     bw = w // h
 
-    xb = unified_linear(x, params["w_up"], use_pallas=cfg.use_pallas)
-    yb = unified_linear(x, params["w_up2"], activation="gelu",
-                        use_lut=cfg.use_lut_activation, use_pallas=cfg.use_pallas)
+    xb = unified_linear(x, params["w_up"])
+    yb = unified_linear(x, params["w_up2"], activation="gelu")
     xb = constrain(xb, "btw")
     conv_state = state["conv"] if state is not None else None
     xc, conv_state = causal_conv1d(xb, params["conv"], conv_state)
@@ -118,7 +117,7 @@ def apply_rglru(params, x, cfg: ArchConfig, state=None, decode=False):
         hseq = _rglru_scan(xc32, r, i, params["lam"], h_prev)
         h_new = hseq[:, -1]
     out = (hseq.astype(x.dtype) * yb)
-    y = unified_linear(out, params["w_down"], use_pallas=cfg.use_pallas)
+    y = unified_linear(out, params["w_down"])
     return constrain(y, "btd"), {"h": h_new, "conv": conv_state}
 
 

@@ -26,6 +26,7 @@ from repro.dist.sharding import constrain
 from repro.models import layers as L
 from repro.models import rglru as RG
 from repro.models import xlstm as XL
+from repro.ops.policy import use_policy
 
 __all__ = ["init_params", "forward", "init_state", "moe_config"]
 
@@ -44,8 +45,6 @@ def moe_config(cfg: ArchConfig) -> moe_lib.MoEConfig:
         group_size=spec.group_size,
         impl=spec.impl,
         renormalize=spec.renormalize,
-        use_lut=cfg.use_lut_activation,
-        use_pallas=cfg.use_pallas,
     )
 
 
@@ -224,7 +223,23 @@ def forward(params, inputs, cfg: ArchConfig, *, pos=None, state=None,
     ``return_expert_counts=True`` appends the per-expert dispatch counts
     (num_experts,) int32, summed over all MoE layers, to the return tuple —
     the router-usage signal consumed by the serving layer's expert cache.
+
+    ``cfg.policy`` (when set) is scoped around the whole pass, so every op
+    in every layer — prefill attention, decode attention, GEMMs, expert
+    GEMMs, activations — dispatches through the same compute policy; with
+    ``cfg.policy=None`` the ambient ``repro.ops`` policy applies.
     """
+    with use_policy(cfg.policy):
+        return _forward(params, inputs, cfg, pos=pos, state=state,
+                        cache_index=cache_index, decode=decode,
+                        task_id=task_id, return_state=return_state,
+                        logits_mode=logits_mode,
+                        return_expert_counts=return_expert_counts)
+
+
+def _forward(params, inputs, cfg: ArchConfig, *, pos=None, state=None,
+             cache_index=None, decode=False, task_id=0, return_state=None,
+             logits_mode: str = "all", return_expert_counts: bool = False):
     x = L.embed_inputs(params["embed"], inputs, cfg)
     b, s = x.shape[0], x.shape[1]
     if pos is None:

@@ -92,10 +92,13 @@ def forward(params, images, cfg: ArchConfig, task: str = "semseg",
     Returns (prediction, aux_loss).  semseg: (B, H, W, classes) logits;
     depth: (B, H, W).
     """
+    from repro.ops.policy import use_policy
+
     task_id = M.TASKS.index(task)
-    x = embed_patches(params, images, cfg)
-    feats, _, aux = T.forward(params, x, cfg, task_id=task_id)
-    y = apply_head(params, feats, task, num_seg_classes=num_seg_classes)
+    with use_policy(cfg.policy):   # patch embed + heads run outside the
+        x = embed_patches(params, images, cfg)       # trunk's own scope
+        feats, _, aux = T.forward(params, x, cfg, task_id=task_id)
+        y = apply_head(params, feats, task, num_seg_classes=num_seg_classes)
     return y, aux
 
 

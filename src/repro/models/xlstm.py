@@ -181,13 +181,13 @@ def apply_mlstm(params, x, cfg: ArchConfig, state=None, decode=False):
     h = cfg.num_heads
     di = 2 * d
     dh = di // h
-    u = unified_linear(x, params["w_up"], use_pallas=cfg.use_pallas)
-    z = unified_linear(x, params["w_gates"], use_pallas=cfg.use_pallas)
+    u = unified_linear(x, params["w_up"])
+    z = unified_linear(x, params["w_gates"])
     u = constrain(u, "btw")
     conv_state = state["conv"] if state is not None else None
     uc, conv_state = causal_conv1d(u, params["conv"], conv_state)
     uc = jax.nn.silu(uc.astype(jnp.float32)).astype(u.dtype)
-    qkv = unified_linear(uc, params["w_qkv"], use_pallas=cfg.use_pallas)
+    qkv = unified_linear(uc, params["w_qkv"])
     q, k, v = jnp.split(qkv, 3, axis=-1)
     gates = jnp.einsum("bsd,dg->bsg", uc.astype(jnp.float32), params["w_if"]) + params["b_if"]
     logi, logf_raw = jnp.split(gates, 2, axis=-1)            # (B,S,H)
@@ -212,8 +212,7 @@ def apply_mlstm(params, x, cfg: ArchConfig, state=None, decode=False):
     hn = group_norm(hout.transpose(0, 2, 1, 3), params["gn_scale"])  # (B,S,H,dh)
     hn = hn.reshape(b, s, di)
     gated = (hn * jax.nn.silu(z.astype(jnp.float32)).astype(hn.dtype))
-    y = unified_linear(gated.astype(x.dtype), params["w_down"],
-                       use_pallas=cfg.use_pallas)
+    y = unified_linear(gated.astype(x.dtype), params["w_down"])
     new_state = {"C": inner[0], "n": inner[1], "m": inner[2], "conv": conv_state}
     return constrain(y, "btd"), new_state
 
@@ -298,11 +297,9 @@ def apply_slstm(params, x, cfg: ArchConfig, state=None, decode=False):
         hseq = jnp.moveaxis(hs, 0, 1)                        # (B,S,H,dh)
 
     hn = group_norm(hseq, params["gn_scale"]).reshape(b, s, d).astype(x.dtype)
-    up = unified_linear(hn, params["w_up"], activation="gelu",
-                        use_lut=cfg.use_lut_activation, use_pallas=cfg.use_pallas)
-    up2 = unified_linear(hn, params["w_up2"], use_pallas=cfg.use_pallas)
-    y = unified_linear((up * up2).astype(x.dtype), params["w_down"],
-                       use_pallas=cfg.use_pallas)
+    up = unified_linear(hn, params["w_up"], activation="gelu")
+    up2 = unified_linear(hn, params["w_up2"])
+    y = unified_linear((up * up2).astype(x.dtype), params["w_down"])
     new_state = {"c": inner[0], "n": inner[1], "h": inner[2], "m": inner[3]}
     return constrain(y, "btd"), new_state
 

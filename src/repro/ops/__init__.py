@@ -1,0 +1,40 @@
+"""``repro.ops`` — the compute-dispatch seam between models and kernels.
+
+Edge-MoE's central architectural idea is a *unified computing unit*: one
+flexible module, configured at run time, shared by almost all computational
+layers.  This package is that seam for the TPU reproduction — the **only**
+way model code reaches a kernel:
+
+  * :mod:`repro.ops.registry` — one registry of op implementations with
+    capability-checked dispatch and loud, counted fallbacks
+    (:func:`dispatch_report`).
+  * :mod:`repro.ops.policy` — :class:`ComputePolicy` + :func:`use_policy`
+    scoped ambient policies (mirroring ``dist.use_rules``), replacing the
+    old scattered ``use_pallas``/``use_lut``/``attn_impl`` flags.
+  * :mod:`repro.ops.schedules` — measured per-(op, shape-bucket, backend)
+    tile schedules (populated by ``benchmarks/ops_autotune.py``).
+
+Typical use::
+
+    from repro import ops
+
+    with ops.use_policy(ops.policy_named("pallas")):
+        y = model.forward(params, x, cfg)
+    print(ops.dispatch_report())
+"""
+
+from repro.ops.policy import (ComputePolicy, DEFAULT_POLICY, OPS,
+                              current_policy, policy_named, use_policy)
+from repro.ops.registry import (DispatchError, capability_matrix, dispatch,
+                                dispatch_report, op_names, register,
+                                registered, reset_dispatch_report)
+from repro.ops.schedules import schedule_for
+from repro.ops.impls import apply_activation
+
+__all__ = [
+    "ComputePolicy", "DEFAULT_POLICY", "OPS",
+    "current_policy", "policy_named", "use_policy",
+    "DispatchError", "capability_matrix", "dispatch", "dispatch_report",
+    "op_names", "register", "registered", "reset_dispatch_report",
+    "schedule_for", "apply_activation",
+]

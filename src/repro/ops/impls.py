@@ -1,0 +1,356 @@
+"""Registered implementations for every logical op.
+
+This module is imported lazily by ``registry.dispatch`` (never at package
+import of the core modules), so it may import ``repro.core`` and
+``repro.kernels`` freely.  Each impl follows the registry contract
+``fn(policy, tiles, *args, **kwargs)`` where ``tiles`` is the resolved
+block-size dict from the measured schedule table + policy overrides.
+
+Impl names across ops (the kernel matrix — see README):
+
+  * ``"xla"``     — plain jnp/einsum path, exact activations available.
+  * ``"blocked"`` — the paper's streaming/blocked schedule in pure jnp
+                    (attention only).
+  * ``"pallas"``  — the Pallas kernels (interpret mode off-TPU).
+  * ``"lut"``     — §IV-C LUT activation in pure jnp (activation only).
+  * ``"ref"``     — ``kernels/ref.py`` oracles (numerics triage; slowest).
+
+Capability predicates return a *reason string* when an impl cannot serve a
+call; ``dispatch`` records the reason and tries the next candidate — the
+loud replacement for the old silent ``use_pallas and x.ndim == 2`` guards.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gelu as gelu_lib
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.ops.registry import register
+
+__all__ = ["apply_activation"]
+
+
+def _is_tracer(x) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def _floating(*arrays) -> bool:
+    return all(jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
+               for a in arrays)
+
+
+# ================================================================ activation
+
+
+_EXACT = {
+    "relu": jax.nn.relu,
+    "gelu": gelu_lib.exact_gelu,
+    "silu": gelu_lib.exact_silu,
+}
+
+
+def apply_activation(x, kind):
+    """Policy-dispatched activation.  ``None``/"none"/"identity" is a free
+    pass-through (no dispatch record — nothing was computed)."""
+    if kind in (None, "none", "identity"):
+        return x
+    from repro.ops.registry import dispatch
+
+    return dispatch("activation", x, kind=kind)
+
+
+def _act_xla(policy, tiles, x, *, kind):
+    return _EXACT[kind](x)
+
+
+def _act_lut_requires(policy, x, *, kind):
+    if kind not in ("gelu", "silu"):
+        return f"no LUT correction table for {kind!r} (gelu/silu only)"
+    return None
+
+
+def _act_lut(policy, tiles, x, *, kind):
+    return gelu_lib.lut_activation(x, kind=kind,
+                                   step_log2=policy.lut_step_log2,
+                                   rng=policy.lut_range)
+
+
+def _act_pallas_requires(policy, x, *, kind):
+    if kind not in ("gelu", "silu"):
+        return f"no LUT correction table for {kind!r} (gelu/silu only)"
+    if not _floating(x):
+        return f"non-float input dtype {jnp.asarray(x).dtype}"
+    return None
+
+
+def _act_pallas(policy, tiles, x, *, kind):
+    return kops.lut_activation(x, kind, step_log2=policy.lut_step_log2,
+                               lut_range=policy.lut_range,
+                               block_rows=tiles.get("block_rows"))
+
+
+def _act_dims(x, *, kind):
+    return {"rows": int(np.prod(x.shape)) // 128 if x.size else 0}
+
+
+register("activation", "xla", _act_xla, default=False,
+         doc="exact erf-GELU / sigmoid-SiLU / ReLU, any dtype")
+register("activation", "lut", _act_lut, requires=_act_lut_requires,
+         default=True,
+         doc="ReLU − δ(|x|) half-table (§IV-C); gelu/silu only")
+register("activation", "pallas", _act_pallas, requires=_act_pallas_requires,
+         dims=_act_dims,
+         doc="LUT kernel, VMEM-resident table; gelu/silu, float dtypes")
+
+
+# ================================================================= attention
+
+
+def _attn_dims(q, k, v, **kw):
+    return {"sq": q.shape[2], "skv": k.shape[2], "d": q.shape[3]}
+
+
+def _attn_xla(policy, tiles, q, k, v, **kw):
+    from repro.core import attention as A
+
+    return A.naive_attention(q, k, v, **kw)
+
+
+def _attn_blocked(policy, tiles, q, k, v, **kw):
+    from repro.core import attention as A
+
+    return A.blocked_attention(q, k, v, block_k=tiles.get("block_k", 512),
+                               **kw)
+
+
+def _attn_pallas_requires(policy, q, k, v, *, causal=True, window=None,
+                          q_offset=0, scale=None):
+    if _is_tracer(q_offset):
+        return "q_offset is traced (dynamic chunk offset); kernel masks " \
+               "are specialized at trace time"
+    if not _floating(q, k, v):
+        return f"non-float dtypes {q.dtype}/{k.dtype}"
+    if q.shape[1] % k.shape[1] != 0:
+        return f"Hq={q.shape[1]} not a multiple of Hkv={k.shape[1]}"
+    return None
+
+
+def _attn_pallas(policy, tiles, q, k, v, *, causal=True, window=None,
+                 q_offset=0, scale=None):
+    return kops.flash_attention(
+        q, k, v, causal=causal, window=window, q_offset=int(q_offset),
+        scale=scale, block_q=tiles.get("block_q"),
+        block_k=tiles.get("block_k"))
+
+
+def _attn_ref(policy, tiles, q, k, v, **kw):
+    return kref.ref_attention(q, k, v, **kw)
+
+
+register("attention", "blocked", _attn_blocked, dims=_attn_dims,
+         default=True,
+         doc="streaming K/V blocks + online-softmax carry (§IV-A/B)")
+register("attention", "xla", _attn_xla,
+         doc="materialized N×N scores (paper baseline), any mask")
+register("attention", "pallas", _attn_pallas,
+         requires=_attn_pallas_requires, dims=_attn_dims,
+         doc="tiled flash kernel; float dtypes, static q_offset, GQA-divisible heads")
+register("attention", "ref", _attn_ref,
+         doc="pure-jnp oracle (f32 softmax, −inf masking)")
+
+
+# ========================================================== attention_decode
+
+
+def _decode_dims(q, k_cache, v_cache, cache_len, **kw):
+    return {"sq": 1, "skv": k_cache.shape[2], "d": q.shape[3]}
+
+
+def _decode_xla(policy, tiles, q, k_cache, v_cache, cache_len, *,
+                window=None, scale=None):
+    from repro.core import attention as A
+
+    return A.decode_attention_xla(q, k_cache, v_cache, cache_len,
+                                  window=window, scale=scale)
+
+
+def _decode_pallas_requires(policy, q, k_cache, v_cache, cache_len, *,
+                            window=None, scale=None):
+    if _is_tracer(cache_len):
+        return "cache_len is traced (per-slot decode positions under jit)"
+    if not _floating(q, k_cache, v_cache):
+        return f"non-float dtypes {q.dtype}/{k_cache.dtype}"
+    arr = np.asarray(cache_len).reshape(-1)
+    if arr.size > 1 and not (arr == arr[0]).all():
+        return "per-sequence cache lengths differ (continuous batching " \
+               "mixes decode positions)"
+    return None
+
+
+def _decode_pallas(policy, tiles, q, k_cache, v_cache, cache_len, *,
+                   window=None, scale=None):
+    # uniform concrete length L: the decode step is flash attention over
+    # the first L cache rows with the causal frontier at L-1 (the new
+    # token's K/V are already written at L-1).  The kernel's mask offset is
+    # trace-static, so every distinct L is a fresh compile — right for
+    # fixed-position batch evaluation, wrong for an eager token-by-token
+    # loop (serve decode traces cache_len and takes the xla path anyway).
+    length = int(np.asarray(cache_len).reshape(-1)[0])
+    return kops.flash_attention(
+        q, k_cache[:, :, :length], v_cache[:, :, :length], causal=True,
+        window=window, q_offset=length - 1, scale=scale,
+        block_q=tiles.get("block_q"), block_k=tiles.get("block_k"))
+
+
+def _decode_ref(policy, tiles, q, k_cache, v_cache, cache_len, *,
+                window=None, scale=None):
+    b, hq, one, d = q.shape
+    hkv = k_cache.shape[1]
+    if hkv != hq:
+        k_cache = jnp.repeat(k_cache, hq // hkv, axis=1)
+        v_cache = jnp.repeat(v_cache, hq // hkv, axis=1)
+    smax = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    cl = jnp.asarray(cache_len).reshape(-1)[:, None, None, None]
+    kpos = jnp.arange(smax)[None, None, None, :]
+    ok = kpos < cl
+    if window is not None:
+        ok = ok & (kpos > cl - 1 - window)
+    s = jnp.where(ok, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+register("attention_decode", "xla", _decode_xla, default=True,
+         doc="grouped-einsum single pass over the cache (M'×V ordering); "
+             "vector per-slot cache_len")
+register("attention_decode", "pallas", _decode_pallas,
+         requires=_decode_pallas_requires, dims=_decode_dims,
+         doc="flash kernel over the live cache prefix; uniform concrete "
+             "cache_len only (one compile per distinct length — batch "
+             "evaluation, not eager decode loops)")
+register("attention_decode", "ref", _decode_ref,
+         doc="materialized-score oracle with cache_len masking")
+
+
+# ==================================================================== linear
+
+
+def _linear_dims(x, w, b=None, **kw):
+    k = x.shape[-1]
+    m = int(np.prod(x.shape[:-1])) if x.ndim > 1 else 1
+    return {"m": m, "n": w.shape[1], "k": k}
+
+
+def _accum_dtype(policy, preferred):
+    return jnp.dtype(preferred) if preferred is not None \
+        else jnp.dtype(policy.accum_dtype)
+
+
+def _linear_xla(policy, tiles, x, w, b=None, *, activation=None,
+                preferred_dtype=None):
+    acc = _accum_dtype(policy, preferred_dtype)
+    y = jnp.matmul(x, w, preferred_element_type=acc)
+    if b is not None:
+        y = y + (b.astype(acc) if policy.bias_f32 else b.astype(y.dtype))
+    y = apply_activation(y, activation)
+    return y.astype(x.dtype)
+
+
+def _linear_pallas_requires(policy, x, w, b=None, *, activation=None,
+                            preferred_dtype=None):
+    if not _floating(x, w):
+        return f"non-float dtypes {x.dtype}/{w.dtype}"
+    if activation not in (None, "none", "relu", "gelu", "silu"):
+        return f"kernel epilogue has no {activation!r} fusion"
+    if x.shape[-1] != w.shape[0]:
+        return f"contraction mismatch {x.shape[-1]} vs {w.shape[0]}"
+    return None
+
+
+def _linear_pallas(policy, tiles, x, w, b=None, *, activation=None,
+                   preferred_dtype=None):
+    # kernel accumulates in f32 and applies the widened f32 bias in the
+    # epilogue; leading dims are flattened inside ``kops.unified_linear``
+    # (the old core-level ``ndim == 2`` guard was needlessly conservative).
+    use_lut = policy.lut_activations and activation in ("gelu", "silu")
+    y = kops.unified_linear(
+        x, w, b, activation=activation, use_lut=use_lut,
+        step_log2=policy.lut_step_log2, lut_range=policy.lut_range,
+        block_m=tiles.get("block_m"), block_n=tiles.get("block_n"),
+        block_k=tiles.get("block_k"))
+    return y.astype(x.dtype)
+
+
+def _linear_ref(policy, tiles, x, w, b=None, *, activation=None,
+                preferred_dtype=None):
+    use_lut = policy.lut_activations and activation in ("gelu", "silu")
+    return kref.ref_linear(x, w, b, activation=activation, use_lut=use_lut,
+                           lut_step_log2=policy.lut_step_log2,
+                           lut_rng=policy.lut_range)
+
+
+register("linear", "xla", _linear_xla, default=True,
+         doc="jnp.matmul, policy accum dtype + widened f32 bias, "
+             "policy-dispatched activation epilogue")
+register("linear", "pallas", _linear_pallas,
+         requires=_linear_pallas_requires, dims=_linear_dims,
+         doc="blocked GEMM kernel, fused bias+(LUT) activation epilogue; "
+             "float dtypes, relu/gelu/silu/none epilogues")
+register("linear", "ref", _linear_ref,
+         doc="pure-jnp oracle (f32 accumulation)")
+
+
+# ========================================================== moe_grouped_gemm
+
+
+def _moe_dims(buf, w, group_sizes=None, **kw):
+    return {"e": buf.shape[0], "c": buf.shape[1], "d": buf.shape[2],
+            "f": w.shape[2]}
+
+
+def _moe_xla(policy, tiles, buf, w, group_sizes=None):
+    # dense sweep: empty experts are still computed (their rows are masked
+    # by the combine); the metaqueue skip belongs to the kernel path.
+    return jnp.einsum("ecd,edf->ecf", buf, w,
+                      preferred_element_type=jnp.dtype(policy.accum_dtype))
+
+
+def _moe_pallas_requires(policy, buf, w, group_sizes=None):
+    if group_sizes is None:
+        return "group_sizes unavailable (dense/onehot dispatch carries no " \
+               "per-expert queue lengths)"
+    if not _floating(buf, w):
+        return f"non-float dtypes {buf.dtype}/{w.dtype}"
+    return None
+
+
+def _moe_pallas(policy, tiles, buf, w, group_sizes=None):
+    return kops.moe_gemm(
+        buf, w, group_sizes,
+        block_c=tiles.get("block_c"), block_f=tiles.get("block_f"),
+        block_k=tiles.get("block_k")).astype(jnp.float32)
+
+
+def _moe_ref(policy, tiles, buf, w, group_sizes=None):
+    return kref.ref_moe_gemm(buf, w, group_sizes).astype(jnp.float32)
+
+
+register("moe_grouped_gemm", "xla", _moe_xla, default=True,
+         doc="dense ecd,edf einsum (f32 accum); computes empty experts")
+register("moe_grouped_gemm", "pallas", _moe_pallas,
+         requires=_moe_pallas_requires, dims=_moe_dims,
+         doc="grouped GEMM kernel with scalar-prefetch metaqueue skip; "
+             "needs group_sizes, float dtypes")
+register("moe_grouped_gemm", "ref", _moe_ref,
+         doc="einsum oracle with empty-expert zeroing")

@@ -1,0 +1,199 @@
+"""Compute policies: *which implementation runs each op, at what precision*.
+
+Edge-MoE's unified computing unit is one flexible module configured at run
+time; this module is the TPU-side analogue of that configuration word.  A
+:class:`ComputePolicy` names, for every logical op in the registry
+(``attention``, ``attention_decode``, ``linear``, ``moe_grouped_gemm``,
+``activation``), which registered implementation should serve it, plus the
+numerics that used to be scattered booleans (accumulation dtype, widened
+f32 bias, LUT step/range) and optional per-op tile-size overrides.
+
+The policy is *ambient*: :func:`use_policy` installs one for a dynamic
+extent (mirroring ``repro.dist.sharding.use_rules``), model code never
+threads flags.  Policies nest — entering a scope saves the previous policy
+and exiting restores it — and a ``None`` policy is a pass-through, so
+callers can forward an optional policy unconditionally.
+
+This module has no ``repro`` imports: ``configs.base`` embeds a policy in
+every ``ArchConfig`` and the registry consults it at dispatch time, so it
+must sit below both.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field, replace
+from typing import Mapping, Optional
+
+__all__ = [
+    "OPS",
+    "ComputePolicy",
+    "use_policy",
+    "current_policy",
+    "DEFAULT_POLICY",
+    "policy_named",
+]
+
+# The logical ops of the unified compute unit.  Implementations register
+# against these names in ``repro.ops.impls``.
+OPS = ("attention", "attention_decode", "linear", "moe_grouped_gemm",
+       "activation")
+
+
+def _freeze_impls(impls) -> tuple:
+    if isinstance(impls, Mapping):
+        impls = tuple(sorted(impls.items()))
+    return tuple((str(k), str(v)) for k, v in impls)
+
+
+def _freeze_tiles(tiles) -> tuple:
+    if isinstance(tiles, Mapping):
+        tiles = tuple(sorted(
+            (op, tuple(sorted(blocks.items()))) for op, blocks in tiles.items()))
+    return tuple((str(op), tuple((str(k), int(v)) for k, v in blocks))
+                 for op, blocks in tiles)
+
+
+@dataclass(frozen=True)
+class ComputePolicy:
+    """Per-op implementation choices + numerics.  Hashable and frozen so it
+    can live inside frozen configs and be closed over by jitted steps.
+
+    ``impls``    — (op, impl) overrides; ops without an entry use
+                   ``default_impl``, and when that is also None the
+                   registry's per-op default (the seed behaviour:
+                   blocked attention, XLA GEMMs, LUT activations).
+    ``tiles``    — (op, ((block_name, size), ...)) overrides consulted
+                   before the measured schedule table.
+    ``accum_dtype`` / ``bias_f32`` — the paper's widened-accumulator /
+                   widened-bias types (§IV-E) as a policy, not a flag.
+    ``lut_step_log2`` / ``lut_range`` — §IV-C LUT geometry.
+    """
+
+    impls: tuple = ()
+    default_impl: Optional[str] = None
+    tiles: tuple = ()
+    accum_dtype: str = "float32"
+    bias_f32: bool = True
+    lut_step_log2: int = -8
+    lut_range: float = 8.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "impls", _freeze_impls(self.impls))
+        object.__setattr__(self, "tiles", _freeze_tiles(self.tiles))
+
+    # ------------------------------------------------------------ queries
+
+    def impl_for(self, op: str) -> Optional[str]:
+        """Requested impl for ``op``: explicit entry > blanket default >
+        None (registry decides)."""
+        for name, impl in self.impls:
+            if name == op:
+                return impl
+        return self.default_impl
+
+    def tile_for(self, op: str) -> dict:
+        for name, blocks in self.tiles:
+            if name == op:
+                return dict(blocks)
+        return {}
+
+    @property
+    def lut_activations(self) -> bool:
+        """True when the activation op resolves to a LUT implementation
+        (used by kernel epilogues that fuse the activation)."""
+        return self.impl_for("activation") in (None, "lut", "pallas")
+
+    # ------------------------------------------------------------ builders
+
+    def with_impls(self, **ops) -> "ComputePolicy":
+        """New policy with per-op impls overridden:
+        ``policy.with_impls(attention="pallas", activation="xla")``."""
+        merged = dict(self.impls)
+        merged.update(ops)
+        return replace(self, impls=tuple(sorted(merged.items())))
+
+    def with_tiles(self, op: str, **blocks) -> "ComputePolicy":
+        """New policy with tile-size overrides for ``op``:
+        ``policy.with_tiles("attention", block_k=64)``."""
+        merged = {o: dict(b) for o, b in self.tiles}
+        merged.setdefault(op, {}).update(blocks)
+        return replace(self, tiles=_freeze_tiles(merged))
+
+    def with_options(self, **kw) -> "ComputePolicy":
+        return replace(self, **kw)
+
+
+#: Registry defaults reproduce the seed behaviour exactly: blocked
+#: streaming attention, XLA GEMMs, LUT activations.
+DEFAULT_POLICY = ComputePolicy()
+
+
+def policy_named(name: str) -> ComputePolicy:
+    """Preset policies for CLIs and benchmarks.
+
+    ``"xla"``     — plain jnp everywhere, exact activations (the paper's
+                    unoptimized baseline).
+    ``"blocked"`` — blocked streaming attention + LUT activations (the
+                    seed default; paper techniques ①②③ without kernels).
+    ``"pallas"``  — Pallas kernels for every op that has one (interpret
+                    mode off-TPU), LUT activations in the fused epilogue.
+    ``"ref"``     — the pure-jnp oracle impls (tests / numerics triage).
+    """
+    if name == "xla":
+        return ComputePolicy(default_impl="xla",
+                             impls=(("activation", "xla"),
+                                    ("attention", "xla")))
+    if name == "blocked":
+        return ComputePolicy(impls=(("activation", "lut"),
+                                    ("attention", "blocked")))
+    if name == "pallas":
+        return ComputePolicy(default_impl="pallas")
+    if name == "ref":
+        return ComputePolicy(default_impl="ref")
+    raise ValueError(f"unknown policy preset: {name!r} "
+                     "(expected xla | blocked | pallas | ref)")
+
+
+# ------------------------------------------------------------ ambient scope
+
+
+_POLICY: contextvars.ContextVar[Optional[ComputePolicy]] = \
+    contextvars.ContextVar("compute_policy", default=None)
+
+
+def current_policy() -> ComputePolicy:
+    """The ambient policy (DEFAULT_POLICY outside any scope)."""
+    return _POLICY.get() or DEFAULT_POLICY
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ComputePolicy] = None, **impl_overrides):
+    """Scope a policy for the dynamic extent; restores the prior policy on
+    exit (nesting-safe, mirrors ``dist.use_rules``).
+
+    ``use_policy(None)`` is a pass-through (the ambient policy stays),
+    so config-carried optional policies forward unconditionally.
+    ``use_policy(attention="pallas")`` derives from the *current* policy
+    with per-op overrides — the scoped-override idiom used by tests and
+    benchmarks.
+
+    Policies bind at TRACE time: a jitted function keeps the impls chosen
+    when it was traced, and its cache key does not include the ambient
+    policy — scoping a new policy around an already-compiled step is a
+    no-op.  Carry the policy where the step is built (``cfg.policy``,
+    ``ServeConfig(policy=...)``) when jit boundaries are involved.
+    """
+    if policy is None and not impl_overrides:
+        yield current_policy()
+        return
+    if policy is None:
+        policy = current_policy()
+    if impl_overrides:
+        policy = policy.with_impls(**impl_overrides)
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)

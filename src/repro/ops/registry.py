@@ -1,0 +1,200 @@
+"""Op registry + capability-checked dispatch with loud fallbacks.
+
+One registry maps each logical op (see ``policy.OPS``) to its named
+implementations.  Every impl is registered with an optional **capability
+predicate**: a function of the call that returns ``None`` when the impl can
+serve it, or a short *reason string* when it cannot (wrong dtype, traced
+offset, missing group sizes, ...).
+
+``dispatch(op, *args, **kwargs)`` resolves the ambient
+:class:`~repro.ops.policy.ComputePolicy` to a requested impl, then walks the
+candidate chain — requested impl, op default, remaining impls in
+registration order — and runs the first capable one.  Whenever the impl
+that actually ran differs from the one the policy requested, the rejection
+reasons are recorded in per-op counters: there are **no silent fallbacks**.
+``dispatch_report()`` exposes the ledger (every kernel-path request is
+accounted for as a hit or a reasoned fallback); under ``jax.jit`` the
+counters tick once per *traced specialization*, since a compiled graph
+re-runs whatever the trace chose.
+
+Implementation functions receive ``(policy, tiles, *args, **kwargs)`` where
+``tiles`` is the resolved block-size dict (measured schedule table merged
+with the policy's per-op overrides — see ``schedules.py``).
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.ops.policy import current_policy
+from repro.ops.schedules import schedule_for
+
+__all__ = [
+    "register",
+    "registered",
+    "op_names",
+    "capability_matrix",
+    "dispatch",
+    "dispatch_report",
+    "reset_dispatch_report",
+    "DispatchError",
+]
+
+
+class DispatchError(RuntimeError):
+    """No registered implementation can serve the call."""
+
+
+@dataclass(frozen=True)
+class OpImpl:
+    op: str
+    name: str
+    fn: Callable
+    requires: Optional[Callable] = None     # (policy, *a, **kw) -> None | str
+    dims: Optional[Callable] = None         # (*a, **kw) -> bucketing dims
+    default: bool = False
+    doc: str = ""                           # capability summary (README/CI)
+
+
+_REGISTRY: dict[str, dict[str, OpImpl]] = {}
+_DEFAULTS: dict[str, str] = {}
+_LOCK = threading.Lock()
+
+# (op, requested, used, reasons) -> count.  ``reasons`` is a tuple of
+# "impl: why it was rejected" strings, empty for a direct hit.
+_COUNTS: Counter = Counter()
+_IMPLS_LOADED = False
+
+
+def register(op: str, name: str, fn: Callable, *,
+             requires: Optional[Callable] = None,
+             dims: Optional[Callable] = None,
+             default: bool = False, doc: str = "") -> OpImpl:
+    """Register implementation ``name`` for logical op ``op``."""
+    impl = OpImpl(op=op, name=name, fn=fn, requires=requires, dims=dims,
+                  default=default, doc=doc)
+    with _LOCK:
+        table = _REGISTRY.setdefault(op, {})
+        table[name] = impl
+        if default or op not in _DEFAULTS:
+            _DEFAULTS[op] = name
+    return impl
+
+
+def _ensure_impls() -> None:
+    """Implementations live in ``repro.ops.impls``; importing it here (not
+    at module import) breaks the core-modules ↔ ops import cycle."""
+    global _IMPLS_LOADED
+    if not _IMPLS_LOADED:
+        import repro.ops.impls  # noqa: F401  (registers on import)
+
+        _IMPLS_LOADED = True
+
+
+def registered(op: str) -> dict[str, OpImpl]:
+    _ensure_impls()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    return dict(_REGISTRY[op])
+
+
+def op_names() -> tuple[str, ...]:
+    _ensure_impls()
+    return tuple(sorted(_REGISTRY))
+
+
+def capability_matrix() -> dict[str, dict[str, str]]:
+    """{op: {impl: capability summary}} — drives the README table and the
+    autotune --smoke coverage check."""
+    _ensure_impls()
+    return {op: {n: i.doc for n, i in impls.items()}
+            for op, impls in sorted(_REGISTRY.items())}
+
+
+def default_impl(op: str) -> str:
+    _ensure_impls()
+    return _DEFAULTS[op]
+
+
+# ------------------------------------------------------------------ dispatch
+
+
+def _candidates(op: str, requested: str) -> list[str]:
+    table = _REGISTRY[op]
+    order = [requested]
+    d = _DEFAULTS.get(op)
+    if d and d not in order:
+        order.append(d)
+    order.extend(n for n in table if n not in order)
+    return [n for n in order if n in table]
+
+
+def dispatch(op: str, *args, **kwargs):
+    """Run ``op`` through the impl the ambient policy names, falling back
+    (loudly: every rejection is recorded) to the first capable impl."""
+    _ensure_impls()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown op {op!r}; registered: {sorted(_REGISTRY)}")
+    policy = current_policy()
+    requested = policy.impl_for(op) or _DEFAULTS[op]
+    reasons: list[str] = []
+    if requested not in _REGISTRY[op]:
+        # a typo'd / not-applicable impl name is a *reasoned* fallback, not
+        # a silent filter (blanket default_impl presets may legitimately
+        # name impls that only some ops register)
+        reasons.append(f"{requested}: not a registered impl for {op!r} "
+                       f"(registered: {sorted(_REGISTRY[op])})")
+    for name in _candidates(op, requested):
+        impl = _REGISTRY[op][name]
+        why = impl.requires(policy, *args, **kwargs) if impl.requires else None
+        if why is not None:
+            reasons.append(f"{name}: {why}")
+            continue
+        with _LOCK:
+            _COUNTS[(op, requested, name, tuple(reasons))] += 1
+        tiles = {}
+        if impl.dims is not None:
+            tiles = schedule_for(op, name, impl.dims(*args, **kwargs))
+        tiles.update(policy.tile_for(op))
+        return impl.fn(policy, tiles, *args, **kwargs)
+    raise DispatchError(
+        f"no capable implementation for op {op!r} "
+        f"(requested {requested!r}): " + "; ".join(reasons))
+
+
+# ------------------------------------------------------------------ report
+
+
+def dispatch_report() -> dict:
+    """Per-op ledger of dispatch decisions since the last reset.
+
+    {op: {"requests": N,
+          "hits": {impl: n},                     # policy impl served it
+          "fallbacks": [{"requested", "used", "reasons", "count"}, ...]}}
+
+    Counts tick at trace time: one entry per jitted specialization, re-used
+    by every execution of that compiled graph.
+    """
+    with _LOCK:
+        items = list(_COUNTS.items())
+    report: dict = {}
+    for (op, requested, used, reasons), n in sorted(items):
+        entry = report.setdefault(op, {"requests": 0, "hits": {},
+                                       "fallbacks": []})
+        entry["requests"] += n
+        if used == requested:
+            entry["hits"][used] = entry["hits"].get(used, 0) + n
+        else:
+            entry["fallbacks"].append({
+                "requested": requested, "used": used,
+                "reasons": list(reasons), "count": n,
+            })
+    return report
+
+
+def reset_dispatch_report() -> None:
+    with _LOCK:
+        _COUNTS.clear()

@@ -30,6 +30,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import ShardingRules
 from repro.models import model as M
+from repro.ops.policy import ComputePolicy
 from repro.train.step import make_serve_step
 
 __all__ = ["ServeConfig", "ServingEngine", "is_recurrent", "feedback_inputs"]
@@ -71,12 +72,26 @@ class ServeConfig:
     seed: int = 0
     prefill_chunk: int = 0         # >0: chunked prefill (bounds prefill
     #                                memory; one compile for all chunks)
+    # compute policy for every serving step (prefill + decode attention,
+    # GEMMs, expert GEMMs) — overrides the arch config's policy; None keeps
+    # it.  Implementations still pass through the capability-checked
+    # registry, so e.g. a pallas decode request over per-slot traced cache
+    # positions falls back loudly (see ops.dispatch_report()).
+    policy: Optional[ComputePolicy] = None
+
+
+def _policy_override(cfg: ArchConfig, scfg: ServeConfig) -> ArchConfig:
+    if scfg.policy is None:
+        return cfg
+    from dataclasses import replace
+
+    return replace(cfg, policy=scfg.policy)
 
 
 class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
                  rules: Optional[ShardingRules] = None):
-        self.cfg = cfg
+        self.cfg = cfg = _policy_override(cfg, scfg)
         self.params = params
         self.scfg = scfg
         self.rules = rules

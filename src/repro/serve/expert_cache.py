@@ -329,7 +329,7 @@ class PagedMoE:
 
         if cfg.num_shared_experts:
             gshared = unified_linear(x, self.shared["shared_wg"],
-                                     activation="silu", use_lut=cfg.use_lut)
+                                     activation="silu")
             ushared = unified_linear(x, self.shared["shared_wu"])
             y = y + unified_linear((gshared * ushared).astype(x.dtype),
                                    self.shared["shared_wd"])

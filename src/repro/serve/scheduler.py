@@ -118,7 +118,9 @@ class LMBackend:
         if scfg.temperature > 0.0:
             raise ValueError("the scheduler decodes greedily (argmax is "
                              "fused into the jitted step)")
-        self.cfg = cfg
+        from repro.serve.engine import _policy_override
+
+        self.cfg = cfg = _policy_override(cfg, scfg)
         self.params = params
         self.scfg = scfg
         self.rules = rules

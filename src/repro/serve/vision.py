@@ -27,6 +27,7 @@ from repro.configs.base import ArchConfig
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models import vit as V
+from repro.ops.policy import use_policy
 from repro.serve.expert_cache import PagedMoE
 from repro.serve.scheduler import Request
 
@@ -67,28 +68,40 @@ class M3ViTServer:
             for i, kind in enumerate(self.kinds) if kind == "attn_moe"
         }
 
+        # layer blocks run OUTSIDE transformer.forward, so the config's
+        # compute policy is scoped here (same policy per step as the LM path)
         def dense_block(bp, x, pos):
-            h = L.apply_norm(bp["ln1"], x, cfg)
-            a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
-                                     causal=False)
-            x = x + a
-            h = L.apply_norm(bp["ln2"], x, cfg)
-            return x + L.apply_mlp(bp["mlp"], h, cfg)
+            with use_policy(cfg.policy):
+                h = L.apply_norm(bp["ln1"], x, cfg)
+                a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
+                                         causal=False)
+                x = x + a
+                h = L.apply_norm(bp["ln2"], x, cfg)
+                return x + L.apply_mlp(bp["mlp"], h, cfg)
 
         def moe_pre(bp, x, pos):
-            h = L.apply_norm(bp["ln1"], x, cfg)
-            a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
-                                     causal=False)
-            x = x + a
-            return x, L.apply_norm(bp["ln2"], x, cfg)
+            with use_policy(cfg.policy):
+                h = L.apply_norm(bp["ln1"], x, cfg)
+                a, _ = L.apply_attention(bp["attn"], h, cfg, pos=pos,
+                                         causal=False)
+                x = x + a
+                return x, L.apply_norm(bp["ln2"], x, cfg)
 
-        self._embed = jax.jit(lambda prm, img: V.embed_patches(prm, img, cfg))
+        def embed(prm, img):
+            with use_policy(cfg.policy):
+                return V.embed_patches(prm, img, cfg)
+
+        self._embed = jax.jit(embed)
         self._dense = jax.jit(dense_block)
         self._moe_pre = jax.jit(moe_pre)
         self._final = jax.jit(
             lambda prm, x: L.apply_norm(prm["final_norm"], x, cfg))
+        def head(prm, f, t):
+            with use_policy(cfg.policy):
+                return V.apply_head(prm, f, t)
+
         self._heads = {
-            t: jax.jit(lambda prm, f, _t=t: V.apply_head(prm, f, _t))
+            t: jax.jit(lambda prm, f, _t=t: head(prm, f, _t))
             for t in MV.TASKS
         }
 
@@ -103,7 +116,8 @@ class M3ViTServer:
             bp = self.layer_params[i]
             if kind == "attn_moe":
                 xr, h = self._moe_pre(bp, x, pos)
-                y, _ = self.paged[i](h, task_id=task_id)
+                with use_policy(self.cfg.policy):
+                    y, _ = self.paged[i](h, task_id=task_id)
                 x = xr + y
             else:
                 x = self._dense(bp, x, pos)

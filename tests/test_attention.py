@@ -105,13 +105,24 @@ class TestBandwidthModel:
 
 
 class TestDispatchPath:
-    def test_attention_impl_switch(self, rng):
+    def test_attention_policy_switch(self, rng):
+        """The impl is named by the ambient compute policy, not a flag."""
+        from repro import ops
+
         q, k, v = mk(rng, 1, 2, 2, 16, 16, 8)
-        o1 = A.attention(q, k, v, impl="naive")
-        o2 = A.attention(q, k, v, impl="blocked", block_k=4)
-        o3 = A.attention(q, k, v, use_pallas=True)
+        with ops.use_policy(attention="xla"):
+            o1 = A.attention(q, k, v)
+        with ops.use_policy(ops.ComputePolicy(
+                impls=(("attention", "blocked"),),
+                tiles=(("attention", (("block_k", 4),)),))):
+            o2 = A.attention(q, k, v)
+        with ops.use_policy(attention="pallas"):
+            o3 = A.attention(q, k, v)
+        with ops.use_policy(attention="ref"):
+            o4 = A.attention(q, k, v)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=3e-5)
         np.testing.assert_allclose(np.asarray(o1), np.asarray(o3), atol=3e-5)
+        np.testing.assert_allclose(np.asarray(o1), np.asarray(o4), atol=3e-5)
 
 
 class TestRingBufferCache:

@@ -29,8 +29,11 @@ class TestPathEquivalence:
         np.testing.assert_allclose(float(a1), float(a2), rtol=1e-5)
 
     def test_pallas_grouped_equals_jnp(self, rng):
+        from repro import ops
+
         cfg, params, x = setup(rng)
-        y1, _ = M.apply_moe(params, replace(cfg, use_pallas=True), x)
+        with ops.use_policy(moe_grouped_gemm="pallas"):
+            y1, _ = M.apply_moe(params, cfg, x)
         y2, _ = M.apply_moe(params, cfg, x)
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                    atol=2e-5, rtol=2e-5)

@@ -67,8 +67,12 @@ class TestUnifiedLinearIntegration:
                                    cfg.vocab_size)
         else:
             x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+        from repro import ops
+
         y1, _, _ = M.forward(params, x, cfg32)
-        y2, _, _ = M.forward(params, x, replace(cfg32, use_pallas=True))
+        pallas = (cfg32.policy or ops.ComputePolicy()).with_impls(
+            linear="pallas", moe_grouped_gemm="pallas")
+        y2, _, _ = M.forward(params, x, replace(cfg32, policy=pallas))
         np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
                                    atol=5e-4, rtol=5e-4)
 
