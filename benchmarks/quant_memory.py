@@ -1,0 +1,201 @@
+"""Quantization memory/accuracy benchmark: experts-per-byte on M³ViT.
+
+Measures, for the paper's own model (fp32 reference vs int8 per-channel vs
+grouped int4 QTensor expert weights):
+
+  * **bytes resident** — expert-weight bytes per MoE layer and the
+    reduction factor vs fp32 (the acceptance bar is ≥3.5× at int8);
+  * **accuracy** — cosine similarity of the quantized semseg forward
+    against the fp32 forward (bar: ≥0.999 at int8), plus max |Δ|;
+  * **dispatch accounting** — the forward runs under
+    ``policy_named("xla_int8")`` and the report must show the quantized
+    impls as HITS (a silent fp fallback would invalidate the memory story);
+  * **expert-cache hit rate at a fixed device budget** — the same byte
+    budget pages fp32 vs int8 expert weights through ``PagedMoE`` over a
+    task-alternating workload: int8 fits ~4× more resident experts, so the
+    demand hit rate rises (§IV-D's streaming, multiplied);
+  * **throughput** — images/s of the paged server per precision (CPU
+    wall-clock; on this container int8 is a *memory* win, not a MACs win).
+
+Emits CSV rows and writes a JSON artifact (``BENCH_QUANT_JSON`` overrides
+the path) consumed by the CI ``quant_parity`` job.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import replace
+
+import jax
+import numpy as np
+
+from benchmarks.common import timeit
+from repro import configs, ops
+from repro.core.moe import expert_param_names
+from repro.models import transformer as T
+from repro.models import vit
+from repro.quant import quantize_tree, tree_bytes
+from repro.serve.expert_cache import PagedMoE
+
+JSON_PATH = os.environ.get(
+    "BENCH_QUANT_JSON",
+    os.path.join(os.path.dirname(__file__), "out", "quant_memory.json"))
+
+
+def _expert_weight_tree(params, cfg):
+    """{layer_path: {name: leaf}} for every MoE block's expert weights."""
+    mcfg = T.moe_config(cfg)
+    names = expert_param_names(mcfg)
+    out = {}
+
+    def walk(node, path):
+        if isinstance(node, dict):
+            if "moe" in node:
+                out[path + ".moe"] = {n: node["moe"][n] for n in names}
+            for k, v in node.items():
+                walk(v, f"{path}.{k}" if path else k)
+        elif isinstance(node, (list, tuple)):
+            for i, v in enumerate(node):
+                walk(v, f"{path}.{i}")
+    walk(params, "")
+    return out
+
+
+def _cosine(a, b) -> float:
+    a = np.asarray(a, np.float64).reshape(-1)
+    b = np.asarray(b, np.float64).reshape(-1)
+    n = np.linalg.norm(a) * np.linalg.norm(b)
+    return float(a @ b / n) if n else 1.0
+
+
+def _first_moe_layer(params, cfg):
+    """One MoE layer's params (experts + gate), unstacked from the scanned
+    periods when needed — the unit the expert cache pages."""
+    moe_params = _expert_weight_tree(params, cfg)
+    path, leaves = next(iter(moe_params.items()))
+    full = dict(leaves)
+    # gate (+ optional bias) ride along for routing
+    node = params
+    for part in path.split(".")[:-1]:
+        node = node[int(part)] if part.isdigit() else node[part]
+    full["gate"] = node["moe"]["gate"]
+    if "gate_bias" in node["moe"]:
+        full["gate_bias"] = node["moe"]["gate_bias"]
+    if path.startswith("layers."):
+        # scanned periods stack a leading axis — page period 0's layer
+        full = jax.tree.map(lambda a: a[0], full)
+    return full
+
+
+def _hit_rate_at_budget(params, cfg, budget_bytes, x, tasks, policy):
+    """Demand hit rate of one paged MoE layer at a fixed byte budget over a
+    task-alternating batch stream (usage-EMA prefetch warm)."""
+    mcfg = T.moe_config(cfg)
+    paged = PagedMoE(_first_moe_layer(params, cfg), mcfg,
+                     budget_bytes=budget_bytes)
+    with ops.use_policy(policy):
+        for t in tasks:          # warm pass: fills usage EMA + residency
+            paged.prefetch(t)
+            paged(x, task_id=t)
+        c = paged.cache
+        c.hits = c.misses = c.evictions = c.bytes_paged = 0
+        for t in tasks:          # measured pass
+            paged.prefetch(t)
+            paged(x, task_id=t)
+    stats = paged.cache.stats()
+    stats["resident_experts"] = paged.cache.max_resident
+    return stats
+
+
+def run(quick: bool = False):
+    cfg = replace(configs.get("m3vit", smoke=True), dtype="float32")
+    params = vit.init_params(jax.random.PRNGKey(0), cfg)
+    img = np.asarray(jax.random.normal(jax.random.PRNGKey(1),
+                                       (2, 128, 256, 3)), np.float32)
+
+    rows = []
+    artifact = {"model": "m3vit-smoke", "quick": bool(quick),
+                "precisions": {}}
+
+    fp_experts = _expert_weight_tree(params, cfg)
+    fp_bytes = sum(tree_bytes(v) for v in fp_experts.values())
+    fwd = jax.jit(lambda p, x, c: vit.forward(p, x, c, "semseg")[0],
+                  static_argnums=(2,))
+    ref_out = np.asarray(fwd(params, img, cfg), np.float32)
+    fp_time = timeit(fwd, params, img, cfg, reps=2)
+
+    # fixed device budget = half the fp32 expert working set of one layer
+    one_layer = _first_moe_layer(params, cfg)
+    budget = sum(tree_bytes(v) for k, v in one_layer.items()
+                 if k not in ("gate", "gate_bias")) // 2
+    x_tokens = jax.device_put(jax.random.normal(
+        jax.random.PRNGKey(2), (2, 64, cfg.d_model)).astype(np.float32))
+    task_stream = [0, 1] * (2 if quick else 4)
+
+    artifact["precisions"]["fp32"] = {
+        "expert_bytes": int(fp_bytes),
+        "bytes_reduction": 1.0,
+        "cosine_vs_fp32": 1.0,
+        "seconds_per_forward": fp_time,
+        "cache_at_budget": _hit_rate_at_budget(
+            params, cfg, budget, x_tokens, task_stream,
+            ops.current_policy()),
+    }
+    rows.append(("quant_memory/fp32", fp_time * 1e6,
+                 f"expert_bytes={fp_bytes};reduction=1.00x"))
+
+    int8_policy = ops.policy_named("xla_int8")
+    for label, bits in (("int8", 8), ("int4", 4)):
+        qparams = quantize_tree(params, bits=bits)
+        q_bytes = sum(tree_bytes(v)
+                      for v in _expert_weight_tree(qparams, cfg).values())
+        reduction = fp_bytes / q_bytes
+        qcfg = replace(cfg, policy=int8_policy)
+        ops.reset_dispatch_report()
+        out = np.asarray(fwd(qparams, img, qcfg), np.float32)
+        report = ops.dispatch_report()
+        q_time = timeit(fwd, qparams, img, qcfg, reps=2)
+        cos = _cosine(out, ref_out)
+        hits = {op: rep["hits"] for op, rep in report.items()}
+        fallbacks = {op: rep["fallbacks"] for op, rep in report.items()
+                     if rep["fallbacks"]}
+        cache = _hit_rate_at_budget(qparams, cfg, budget, x_tokens,
+                                    task_stream, int8_policy)
+        artifact["precisions"][label] = {
+            "expert_bytes": int(q_bytes),
+            "bytes_reduction": reduction,
+            "cosine_vs_fp32": cos,
+            "max_abs_dev": float(np.max(np.abs(out - ref_out))),
+            "seconds_per_forward": q_time,
+            "dispatch_hits": hits,
+            "dispatch_fallbacks": fallbacks,
+            "cache_at_budget": cache,
+        }
+        rows.append((f"quant_memory/{label}", q_time * 1e6,
+                     f"reduction={reduction:.2f}x;cosine={cos:.6f};"
+                     f"hit_rate={cache['hit_rate']:.2f}"))
+
+    i8 = artifact["precisions"]["int8"]
+    artifact["acceptance"] = {
+        "bytes_reduction_ge_3p5x": i8["bytes_reduction"] >= 3.5,
+        "cosine_ge_0p999": i8["cosine_vs_fp32"] >= 0.999,
+        "int8_impls_hit": (
+            "xla_int8" in i8["dispatch_hits"].get("linear", {})
+            and "xla_int8" in i8["dispatch_hits"].get("moe_grouped_gemm", {})
+            and "linear" not in i8["dispatch_fallbacks"]
+            and "moe_grouped_gemm" not in i8["dispatch_fallbacks"]),
+    }
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(artifact, f, indent=2)
+    print(f"[quant_memory] wrote {JSON_PATH}; int8 reduction "
+          f"{i8['bytes_reduction']:.2f}x cosine {i8['cosine_vs_fp32']:.6f} "
+          f"acceptance={artifact['acceptance']}")
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import emit
+
+    emit(run(quick=True))

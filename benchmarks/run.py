@@ -8,6 +8,8 @@
   serve_throughput   — continuous batching vs static serving
   ops_dispatch       — M³ViT tokens/s per compute policy (xla / blocked /
                        pallas-interpret), JSON artifact w/ dispatch report
+  quant_memory       — int8/int4 expert-weight bytes, cosine vs fp32,
+                       expert-cache hit rate at a fixed byte budget
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 Emits ``name,us_per_call,derived`` CSV.
@@ -21,7 +23,7 @@ from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
            "table5_ablation", "fig12_breakdown", "serve_throughput",
-           "ops_dispatch"]
+           "ops_dispatch", "quant_memory"]
 
 
 def main() -> int:

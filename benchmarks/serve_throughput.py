@@ -136,29 +136,24 @@ def _vision_section(quick, rows, out, rng, resident_fraction=0.5):
     imgs = rng.standard_normal((4, MV.IMAGE_H, MV.IMAGE_W, 3)).astype(
         np.float32)
 
-    for label, sparse in (("uniform", False), ("task_sparse", True)):
-        params = V.init_params(jax.random.PRNGKey(0), cfg)
-        if sparse:
-            params = _task_sparse_gates(params, len(MV.TASKS),
-                                        cfg.moe.num_experts)
-        backend = VisionBackend(cfg, params,
-                                resident_fraction=resident_fraction)
+    def _pass(backend, count):
+        sched = Scheduler(backend, total_slots=batch * len(MV.TASKS),
+                          quantum=1, num_tasks=len(MV.TASKS))
+        sched.run([Request(rid=i, task_id=i % len(MV.TASKS),
+                           prompt=imgs[i % imgs.shape[0]])
+                   for i in range(count)])
+        return sched.metrics()
 
-        def _pass(count):
-            sched = Scheduler(backend, total_slots=batch * len(MV.TASKS),
-                              quantum=1, num_tasks=len(MV.TASKS))
-            sched.run([Request(rid=i, task_id=i % len(MV.TASKS),
-                               prompt=imgs[i % imgs.shape[0]])
-                       for i in range(count)])
-            return sched.metrics()
-
-        _pass(n)            # warmup: compiles + usage-EMA/cache warm-in
+    def _measure(label, backend):
+        _pass(backend, n)   # warmup: compiles + usage-EMA/cache warm-in
         # reset demand counters so the measured pass reports steady state
         for paged in backend.server.paged.values():
             c = paged.cache
             c.hits = c.misses = c.evictions = c.bytes_paged = 0
-        m = _pass(n)        # measured: same backend, warm caches & stats
+        m = _pass(backend, n)  # measured: same backend, warm caches & stats
         cache = m["expert_cache"]
+        cache["resident_experts"] = next(
+            iter(backend.server.paged.values())).cache.max_resident
         out[f"vision_{label}"] = {
             "items_per_s": m["items_per_s"],
             "latency_p50_s": m["latency_p50_s"],
@@ -170,6 +165,31 @@ def _vision_section(quick, rows, out, rng, resident_fraction=0.5):
             1e6 / max(m["items_per_s"], 1e-9),
             f"hit_rate={cache['hit_rate']:.3f};"
             f"resident_fraction={cache['resident_fraction']:.2f}"))
+        return backend
+
+    backend = None
+    for label, sparse in (("uniform", False), ("task_sparse", True)):
+        params = V.init_params(jax.random.PRNGKey(0), cfg)
+        if sparse:
+            params = _task_sparse_gates(params, len(MV.TASKS),
+                                        cfg.moe.num_experts)
+        backend = _measure(label, VisionBackend(
+            cfg, params, resident_fraction=resident_fraction))
+
+    # int8 experts at the SAME device byte budget as the fp task-sparse
+    # pass: packed weights fit more resident experts, so the demand hit
+    # rate rises (the quantization × paging multiplier)
+    from repro.ops import policy_named
+    from repro.quant import quantize_tree
+
+    fp_cache = next(iter(backend.server.paged.values())).cache
+    budget = fp_cache.max_resident * fp_cache._expert_bytes
+    params = V.init_params(jax.random.PRNGKey(0), cfg)
+    params = _task_sparse_gates(params, len(MV.TASKS), cfg.moe.num_experts)
+    qparams = quantize_tree(params, bits=8)
+    qcfg = replace(cfg, policy=policy_named("xla_int8"))
+    _measure("task_sparse_int8", VisionBackend(
+        qcfg, qparams, expert_budget_bytes=budget))
 
 
 def run(quick: bool = False):

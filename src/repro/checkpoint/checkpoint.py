@@ -41,6 +41,10 @@ def _path_str(path) -> str:
         key = getattr(p, "key", None)
         if key is None:
             key = getattr(p, "idx", None)
+        if key is None:
+            # GetAttrKey — custom pytree nodes registered with key paths
+            # (e.g. quant.QTensor: leaves land as "<param>.q"/"<param>.scale")
+            key = getattr(p, "name", None)
         parts.append(str(key))
     return ".".join(parts)
 

@@ -68,6 +68,10 @@ class ArchConfig:
     # ComputePolicy here is scoped around the model's forward pass.
     dtype: str = "bfloat16"
     policy: Optional[ComputePolicy] = None
+    # KV-cache storage: "none" keeps activation-dtype caches; "int8" stores
+    # packed int8 values + per-(token, head) f32 scales (~2× bf16 / ~3.8×
+    # f32 smaller) and routes decode through the "xla_int8" registry impl.
+    kv_quant: str = "none"
     remat: bool = True
     # multi-task (m3vit)
     num_tasks: int = 1

@@ -10,6 +10,11 @@ Usage:
   # the paper's M3ViT (semseg+depth) through the same scheduler with
   # paged expert weights:
   python -m repro.launch.serve --arch m3vit --smoke --scheduler
+  # quantized serving: int8 experts/weights + int8 KV cache under the
+  # xla_int8 compute policy (~4x more resident experts per byte):
+  python -m repro.launch.serve --arch m3vit --smoke --scheduler --quant int8
+  python -m repro.launch.serve --arch llama3_2_1b --smoke --quant int8 \
+      --dispatch-report
 """
 
 from __future__ import annotations
@@ -63,6 +68,9 @@ def _serve_scheduler_vision(cfg, args) -> int:
     key = jax.random.PRNGKey(args.seed)
     k_params, k_data = jax.random.split(key)
     params = V.init_params(k_params, cfg)
+    if args.quant:
+        from repro.quant import quantize_tree
+        params = quantize_tree(params, bits=8 if args.quant == "int8" else 4)
     backend = VisionBackend(cfg, params,
                             resident_fraction=args.resident_fraction)
     sched = Scheduler(backend, total_slots=args.batch, quantum=1,
@@ -108,9 +116,13 @@ def main() -> int:
     ap.add_argument("--resident-fraction", type=float, default=0.5,
                     help="vision scheduler: fraction of experts resident")
     ap.add_argument("--policy", default=None,
-                    choices=["xla", "blocked", "pallas", "ref"],
+                    choices=["xla", "blocked", "pallas", "ref", "xla_int8"],
                     help="compute policy for every serving step (default: "
                          "the arch config's policy)")
+    ap.add_argument("--quant", default=None, choices=["int8", "int4"],
+                    help="quantize the weight tree (QTensor leaves), store "
+                         "the KV cache int8, and serve under the xla_int8 "
+                         "policy unless --policy overrides it")
     ap.add_argument("--dispatch-report", action="store_true",
                     help="print ops.dispatch_report() after serving")
     args = ap.parse_args()
@@ -119,9 +131,16 @@ def main() -> int:
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     policy = policy_named(args.policy) if args.policy else None
+    kv_quant = None
+    if args.quant:
+        # quantized serving: int8 KV caches + the int8 compute policy, so
+        # the quantized impls are dispatch HITS (check --dispatch-report)
+        policy = policy or policy_named("xla_int8")
+        kv_quant = "int8"
     scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
                        eos_id=args.eos_id, seed=args.seed,
-                       prefill_chunk=args.prefill_chunk, policy=policy)
+                       prefill_chunk=args.prefill_chunk, policy=policy,
+                       kv_quant=kv_quant)
 
     if args.scheduler and cfg.family == "vit-moe":
         if policy is not None:
@@ -135,13 +154,14 @@ def main() -> int:
     key = jax.random.PRNGKey(args.seed)
     k_params, k_prompts = jax.random.split(key)   # independent init/data
     params = M.init_params(k_params, cfg)
+    if args.quant:
+        from repro.quant import quantize_tree
+        params = quantize_tree(params, bits=8 if args.quant == "int8" else 4)
 
     if args.scheduler:
         if scfg.temperature > 0:
-            scfg = ServeConfig(max_len=scfg.max_len, eos_id=scfg.eos_id,
-                               seed=scfg.seed,
-                               prefill_chunk=scfg.prefill_chunk,
-                               policy=scfg.policy)
+            from dataclasses import replace
+            scfg = replace(scfg, temperature=0.0)
             print("[serve] scheduler decodes greedily; ignoring temperature")
         rc = _serve_scheduler_lm(cfg, params, scfg, args, k_prompts)
         if args.dispatch_report:

@@ -19,6 +19,7 @@ from repro.configs.base import ArchConfig
 from repro.core.attention import attention, decode_attention
 from repro.core.unified_linear import unified_linear
 from repro.dist.sharding import constrain
+from repro.quant import QTensor, quantize_kv
 
 # ---------------------------------------------------------------- norms
 
@@ -172,6 +173,43 @@ def _split_heads(x, n_heads, hd):
     return x.reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
 
 
+def _upd_cache(c, new, slot):
+    """Write ``new`` (B, H, s, ...) into cache ``c`` at position ``slot``
+    (scalar, or a (B,) vector — continuous batching writes each sequence
+    at its own slot)."""
+    slot = jnp.asarray(slot)
+    if slot.ndim == 1:
+        return jax.vmap(lambda cb, nb, i: jax.lax.dynamic_update_slice_in_dim(
+            cb, nb, i, axis=1))(c, new, slot)
+    return jax.lax.dynamic_update_slice_in_dim(c, new, slot, axis=2)
+
+
+def _kv_write(cache, k, v, slot, kvq: bool):
+    """Write fp K/V rows into the cache, quantizing per (token, head) when
+    the cache is int8 (``kvq``)."""
+    if kvq:
+        kq, ks = quantize_kv(k)
+        vq, vs = quantize_kv(v)
+        return {"k": constrain(_upd_cache(cache["k"], kq, slot), "cache"),
+                "v": constrain(_upd_cache(cache["v"], vq, slot), "cache"),
+                "k_scale": constrain(
+                    _upd_cache(cache["k_scale"], ks, slot), "cache"),
+                "v_scale": constrain(
+                    _upd_cache(cache["v_scale"], vs, slot), "cache")}
+    return {"k": constrain(_upd_cache(cache["k"], k, slot), "cache"),
+            "v": constrain(_upd_cache(cache["v"], v, slot), "cache")}
+
+
+def _kv_full(cache, kvq: bool, dtype):
+    """Dense K/V views of a cache (dequantized when int8) — the chunked-
+    prefill attention reads these; residency stays packed."""
+    if kvq:
+        k = (cache["k"].astype(jnp.float32) * cache["k_scale"]).astype(dtype)
+        v = (cache["v"].astype(jnp.float32) * cache["v_scale"]).astype(dtype)
+        return k, v
+    return cache["k"], cache["v"]
+
+
 def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
                     window=None, cache=None, cache_index=None):
     """x: (B, S, d).  Training/prefill when cache is None or being filled;
@@ -200,6 +238,11 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
 
     new_cache = cache
     smax = cache["k"].shape[2] if cache is not None else None
+    # quantized KV (cfg.kv_quant="int8"): the cache carries int8 values +
+    # per-(token, head) f32 scales; writes quantize the new rows, decode
+    # reads dispatch a QTensor cache to the "xla_int8" registry impl.
+    kvq = cache is not None and "k_scale" in cache
+    cdt = str(k.dtype)
     # ring-buffer cache: windowed layers allocate only `window` slots; token
     # t lives at slot t % smax.  Attention over a ring is a sum over slots,
     # so ordering is irrelevant; K/V carry their absolute-position RoPE.
@@ -211,36 +254,29 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
         # at its own position — admitted into freed slots mid-flight).
         ci = jnp.asarray(cache_index)
         slot = ci % smax if ring else ci
-        if ci.ndim == 1:
-            def _upd(c, kn, i):   # per-sequence write at its own slot
-                return jax.lax.dynamic_update_slice_in_dim(c, kn, i, axis=1)
-            kc = jax.vmap(_upd)(cache["k"], k, slot)
-            vc = jax.vmap(_upd)(cache["v"], v, slot)
+        new_cache = _kv_write(cache, k, v, slot, kvq)
+        if kvq:
+            kr = QTensor(new_cache["k"], new_cache["k_scale"], dtype=cdt)
+            vr = QTensor(new_cache["v"], new_cache["v_scale"], dtype=cdt)
         else:
-            kc = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, slot,
-                                                     axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, slot,
-                                                     axis=2)
-        kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
-        new_cache = {"k": kc, "v": vc}
+            kr, vr = new_cache["k"], new_cache["v"]
         cache_len = jnp.broadcast_to(ci + 1, (b,)).astype(jnp.int32)
         if ring:
             # every live slot is within the window by construction
-            o = decode_attention(q, kc, vc, jnp.minimum(cache_len, smax))
+            o = decode_attention(q, kr, vr, jnp.minimum(cache_len, smax))
         else:
-            o = decode_attention(q, kc, vc, cache_len, window=window)
+            o = decode_attention(q, kr, vr, cache_len, window=window)
     else:
         if cache is not None and not ring and cache_index is not None:
             # (chunked) prefill: write the chunk into the cache at its
             # absolute offset, attend against everything cached so far —
             # causal masking by absolute position handles both the first
-            # chunk and continuations (cache_index may be traced)
-            kc = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k, cache_index, axis=2)
-            vc = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v, cache_index, axis=2)
-            kc, vc = constrain(kc, "cache"), constrain(vc, "cache")
-            new_cache = {"k": kc, "v": vc}
+            # chunk and continuations (cache_index may be traced).  A
+            # quantized cache is dequantized for the chunk's attention
+            # (residency stays int8; earlier chunks carry quant error,
+            # matching what decode will read).
+            new_cache = _kv_write(cache, k, v, cache_index, kvq)
+            kc, vc = _kv_full(new_cache, kvq, cdt)
             o = attention(q, kc, vc, causal=causal, window=window,
                           q_offset=cache_index)
         else:
@@ -252,15 +288,9 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
                     shift = (s - smax) % smax
                     kw = jnp.roll(k[:, :, -smax:], shift, axis=2)
                     vw = jnp.roll(v[:, :, -smax:], shift, axis=2)
-                    new_cache = {"k": constrain(kw, "cache"),
-                                 "v": constrain(vw, "cache")}
+                    new_cache = _kv_write(cache, kw, vw, 0, kvq)
                 else:
-                    kc = jax.lax.dynamic_update_slice_in_dim(
-                        cache["k"], k, 0, axis=2)
-                    vc = jax.lax.dynamic_update_slice_in_dim(
-                        cache["v"], v, 0, axis=2)
-                    new_cache = {"k": constrain(kc, "cache"),
-                                 "v": constrain(vc, "cache")}
+                    new_cache = _kv_write(cache, k, v, 0, kvq)
     o = constrain(o, "bhsd")
     with jax.named_scope("attn_out"):
         o = o.transpose(0, 2, 1, 3).reshape(b, s, hq * hd)
@@ -271,6 +301,15 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
 def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
     hkv, hd = cfg.num_kv_heads, cfg.hd
     shape = (batch, hkv, max_len, hd)
+    if cfg.kv_quant == "int8":
+        sshape = (batch, hkv, max_len, 1)
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "k_scale": jnp.zeros(sshape, jnp.float32),
+                "v_scale": jnp.zeros(sshape, jnp.float32)}
+    if cfg.kv_quant != "none":
+        raise ValueError(f"unknown kv_quant {cfg.kv_quant!r} "
+                         "(expected none | int8)")
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 

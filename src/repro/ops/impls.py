@@ -32,6 +32,7 @@ from repro.core import gelu as gelu_lib
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.ops.registry import register
+from repro.quant import dequantize, is_qtensor
 
 __all__ = ["apply_activation"]
 
@@ -41,8 +42,18 @@ def _is_tracer(x) -> bool:
 
 
 def _floating(*arrays) -> bool:
-    return all(jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
+    return all(not is_qtensor(a)
+               and jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
                for a in arrays)
+
+
+def _reject_qtensor(*arrays):
+    """Reason string when any operand is quantized — the fp impls must
+    bounce QTensors to the ``xla_int8`` impls *loudly*, never crash on or
+    silently dequantize them."""
+    if any(is_qtensor(a) for a in arrays):
+        return "operand is quantized (QTensor) — served by the xla_int8 impl"
+    return None
 
 
 # ================================================================ activation
@@ -172,6 +183,11 @@ def _decode_dims(q, k_cache, v_cache, cache_len, **kw):
     return {"sq": 1, "skv": k_cache.shape[2], "d": q.shape[3]}
 
 
+def _decode_fp_requires(policy, q, k_cache, v_cache, cache_len, *,
+                        window=None, scale=None):
+    return _reject_qtensor(q, k_cache, v_cache)
+
+
 def _decode_xla(policy, tiles, q, k_cache, v_cache, cache_len, *,
                 window=None, scale=None):
     from repro.core import attention as A
@@ -182,6 +198,9 @@ def _decode_xla(policy, tiles, q, k_cache, v_cache, cache_len, *,
 
 def _decode_pallas_requires(policy, q, k_cache, v_cache, cache_len, *,
                             window=None, scale=None):
+    why = _reject_qtensor(q, k_cache, v_cache)
+    if why:
+        return why
     if _is_tracer(cache_len):
         return "cache_len is traced (per-slot decode positions under jit)"
     if not _floating(q, k_cache, v_cache):
@@ -231,7 +250,33 @@ def _decode_ref(policy, tiles, q, k_cache, v_cache, cache_len, *,
     return out.astype(q.dtype)
 
 
+def _decode_int8_requires(policy, q, k_cache, v_cache, cache_len, *,
+                          window=None, scale=None):
+    if not (is_qtensor(k_cache) and is_qtensor(v_cache)):
+        return "KV cache is not quantized (enable kv_quant='int8' to " \
+               "build int8 caches)"
+    if k_cache.bits != 8 or v_cache.bits != 8:
+        return f"int{k_cache.bits} KV cache (int8 only)"
+    if not _floating(q):
+        return f"non-float query dtype {jnp.asarray(q).dtype}"
+    return None
+
+
+def _decode_int8(policy, tiles, q, k_cache, v_cache, cache_len, *,
+                 window=None, scale=None):
+    # weights-only numerics: the per-(token, head) scales broadcast against
+    # the int8 payload, so dequantization is one fused multiply per cache
+    # read — the paged bytes stay int8, the attention math runs fp.
+    from repro.core import attention as A
+
+    kf = dequantize(k_cache, q.dtype)
+    vf = dequantize(v_cache, q.dtype)
+    return A.decode_attention_xla(q, kf, vf, cache_len,
+                                  window=window, scale=scale)
+
+
 register("attention_decode", "xla", _decode_xla, default=True,
+         requires=_decode_fp_requires,
          doc="grouped-einsum single pass over the cache (M'×V ordering); "
              "vector per-slot cache_len")
 register("attention_decode", "pallas", _decode_pallas,
@@ -240,7 +285,12 @@ register("attention_decode", "pallas", _decode_pallas,
              "cache_len only (one compile per distinct length — batch "
              "evaluation, not eager decode loops)")
 register("attention_decode", "ref", _decode_ref,
+         requires=_decode_fp_requires,
          doc="materialized-score oracle with cache_len masking")
+register("attention_decode", "xla_int8", _decode_int8,
+         requires=_decode_int8_requires,
+         doc="int8 KV cache with per-(token, head) scales, dequantized on "
+             "read; vector per-slot cache_len")
 
 
 # ==================================================================== linear
@@ -257,6 +307,11 @@ def _accum_dtype(policy, preferred):
         else jnp.dtype(policy.accum_dtype)
 
 
+def _linear_fp_requires(policy, x, w, b=None, *, activation=None,
+                        preferred_dtype=None):
+    return _reject_qtensor(x, w)
+
+
 def _linear_xla(policy, tiles, x, w, b=None, *, activation=None,
                 preferred_dtype=None):
     acc = _accum_dtype(policy, preferred_dtype)
@@ -269,6 +324,9 @@ def _linear_xla(policy, tiles, x, w, b=None, *, activation=None,
 
 def _linear_pallas_requires(policy, x, w, b=None, *, activation=None,
                             preferred_dtype=None):
+    why = _reject_qtensor(x, w)
+    if why:
+        return why
     if not _floating(x, w):
         return f"non-float dtypes {x.dtype}/{w.dtype}"
     if activation not in (None, "none", "relu", "gelu", "silu"):
@@ -300,7 +358,40 @@ def _linear_ref(policy, tiles, x, w, b=None, *, activation=None,
                            lut_rng=policy.lut_range)
 
 
+def _linear_int8_requires(policy, x, w, b=None, *, activation=None,
+                          preferred_dtype=None):
+    if not is_qtensor(w):
+        return "weight is not quantized (run quant.quantize_tree first)"
+    if is_qtensor(x):
+        return "activations are quantized (weights-only impl)"
+    if not _floating(x):
+        return f"non-float input dtype {jnp.asarray(x).dtype}"
+    if x.shape[-1] != w.shape[-2]:
+        return f"contraction mismatch {x.shape[-1]} vs {w.shape[-2]}"
+    return None
+
+
+def _linear_int8(policy, tiles, x, w, b=None, *, activation=None,
+                 preferred_dtype=None):
+    # int8 per-channel: the scale is constant along K, so dequantization
+    # commutes with the GEMM — (x @ q) * scale is the epilogue form a
+    # fused kernel would use.  Grouped int4 scales vary along K, so the
+    # weight dequantizes before the GEMM (weights-only compression).
+    acc = _accum_dtype(policy, preferred_dtype)
+    if w.bits == 8:
+        y = jnp.matmul(x.astype(acc), w.q.astype(acc),
+                       preferred_element_type=acc) * w.scale.astype(acc)
+    else:
+        y = jnp.matmul(x.astype(acc), dequantize(w, acc),
+                       preferred_element_type=acc)
+    if b is not None:
+        y = y + (b.astype(acc) if policy.bias_f32 else b.astype(y.dtype))
+    y = apply_activation(y, activation)
+    return y.astype(x.dtype)
+
+
 register("linear", "xla", _linear_xla, default=True,
+         requires=_linear_fp_requires,
          doc="jnp.matmul, policy accum dtype + widened f32 bias, "
              "policy-dispatched activation epilogue")
 register("linear", "pallas", _linear_pallas,
@@ -308,7 +399,12 @@ register("linear", "pallas", _linear_pallas,
          doc="blocked GEMM kernel, fused bias+(LUT) activation epilogue; "
              "float dtypes, relu/gelu/silu/none epilogues")
 register("linear", "ref", _linear_ref,
+         requires=_linear_fp_requires,
          doc="pure-jnp oracle (f32 accumulation)")
+register("linear", "xla_int8", _linear_int8,
+         requires=_linear_int8_requires,
+         doc="QTensor weights: int8 per-channel dequant epilogue / int4 "
+             "grouped dequant-then-GEMM; fp activations")
 
 
 # ========================================================== moe_grouped_gemm
@@ -319,6 +415,10 @@ def _moe_dims(buf, w, group_sizes=None, **kw):
             "f": w.shape[2]}
 
 
+def _moe_fp_requires(policy, buf, w, group_sizes=None):
+    return _reject_qtensor(buf, w)
+
+
 def _moe_xla(policy, tiles, buf, w, group_sizes=None):
     # dense sweep: empty experts are still computed (their rows are masked
     # by the combine); the metaqueue skip belongs to the kernel path.
@@ -327,6 +427,9 @@ def _moe_xla(policy, tiles, buf, w, group_sizes=None):
 
 
 def _moe_pallas_requires(policy, buf, w, group_sizes=None):
+    why = _reject_qtensor(buf, w)
+    if why:
+        return why
     if group_sizes is None:
         return "group_sizes unavailable (dense/onehot dispatch carries no " \
                "per-expert queue lengths)"
@@ -346,11 +449,40 @@ def _moe_ref(policy, tiles, buf, w, group_sizes=None):
     return kref.ref_moe_gemm(buf, w, group_sizes).astype(jnp.float32)
 
 
+def _moe_int8_requires(policy, buf, w, group_sizes=None):
+    if not is_qtensor(w):
+        return "expert weights are not quantized (run quant.quantize_tree " \
+               "first)"
+    if is_qtensor(buf):
+        return "expert queue buffers are quantized (weights-only impl)"
+    if not _floating(buf):
+        return f"non-float buffer dtype {jnp.asarray(buf).dtype}"
+    return None
+
+
+def _moe_int8(policy, tiles, buf, w, group_sizes=None):
+    acc = jnp.dtype(policy.accum_dtype)
+    if w.bits == 8:
+        # per-channel scale (E, 1, F) is the per-expert dequant epilogue
+        y = jnp.einsum("ecd,edf->ecf", buf.astype(acc), w.q.astype(acc),
+                       preferred_element_type=acc) * w.scale.astype(acc)
+    else:
+        y = jnp.einsum("ecd,edf->ecf", buf, dequantize(w, acc),
+                       preferred_element_type=acc)
+    return y
+
+
 register("moe_grouped_gemm", "xla", _moe_xla, default=True,
+         requires=_moe_fp_requires,
          doc="dense ecd,edf einsum (f32 accum); computes empty experts")
 register("moe_grouped_gemm", "pallas", _moe_pallas,
          requires=_moe_pallas_requires, dims=_moe_dims,
          doc="grouped GEMM kernel with scalar-prefetch metaqueue skip; "
              "needs group_sizes, float dtypes")
 register("moe_grouped_gemm", "ref", _moe_ref,
+         requires=_moe_fp_requires,
          doc="einsum oracle with empty-expert zeroing")
+register("moe_grouped_gemm", "xla_int8", _moe_int8,
+         requires=_moe_int8_requires,
+         doc="QTensor expert weights: int8 per-channel dequant epilogue / "
+             "int4 grouped dequant-then-einsum; fp queue buffers")

@@ -140,6 +140,13 @@ def policy_named(name: str) -> ComputePolicy:
     ``"pallas"``  — Pallas kernels for every op that has one (interpret
                     mode off-TPU), LUT activations in the fused epilogue.
     ``"ref"``     — the pure-jnp oracle impls (tests / numerics triage).
+    ``"xla_int8"`` — quantized serving: the weight ops (``linear``,
+                    ``moe_grouped_gemm``) and the KV decode run the
+                    ``xla_int8`` impls (QTensor weights / int8 KV caches,
+                    dequant-in-epilogue); prefill attention and activations
+                    keep the registry defaults.  Requires quantized params
+                    (``quant.quantize_tree``) and ``kv_quant="int8"`` caches
+                    — fp operands fall back loudly in ``dispatch_report()``.
     """
     if name == "xla":
         return ComputePolicy(default_impl="xla",
@@ -152,8 +159,12 @@ def policy_named(name: str) -> ComputePolicy:
         return ComputePolicy(default_impl="pallas")
     if name == "ref":
         return ComputePolicy(default_impl="ref")
+    if name == "xla_int8":
+        return ComputePolicy(impls=(("linear", "xla_int8"),
+                                    ("moe_grouped_gemm", "xla_int8"),
+                                    ("attention_decode", "xla_int8")))
     raise ValueError(f"unknown policy preset: {name!r} "
-                     "(expected xla | blocked | pallas | ref)")
+                     "(expected xla | blocked | pallas | ref | xla_int8)")
 
 
 # ------------------------------------------------------------ ambient scope

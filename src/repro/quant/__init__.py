@@ -1,0 +1,19 @@
+"""``repro.quant`` — int8/int4 weight & KV quantization.
+
+Storage format (:class:`QTensor`), offline converters
+(:func:`quantize_tree`), and the jit-safe KV-cache quantizer
+(:func:`quantize_kv`).  The compute side lives in ``repro.ops.impls`` as
+the ``"xla_int8"`` registry implementations, selected via
+``ops.policy_named("xla_int8")``; the paging side in
+``serve/expert_cache.py``, which pages packed expert weights so a fixed
+device budget holds ~4× (int8) / ~8× (int4) more resident experts.
+"""
+
+from repro.quant.qtensor import (QTensor, QUANT_PARAM_NAMES, dequantize,
+                                 dequantize_tree, is_qtensor, quantize,
+                                 quantize_kv, quantize_tree, tree_bytes)
+
+__all__ = [
+    "QTensor", "QUANT_PARAM_NAMES", "dequantize", "dequantize_tree",
+    "is_qtensor", "quantize", "quantize_kv", "quantize_tree", "tree_bytes",
+]

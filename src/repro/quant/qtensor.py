@@ -1,0 +1,266 @@
+"""QTensor: packed low-precision weights + scales as one pytree leaf group.
+
+Edge-MoE's memory story is experts-per-byte: the DDR expert stream (§IV-D)
+moves whole expert weight tensors, so shrinking the bytes per expert
+multiplies both the resident-expert count at a fixed device budget and the
+effective paging bandwidth.  A :class:`QTensor` is the storage format that
+realizes this on the TPU side:
+
+  * **int8, per-channel** — symmetric quantization along the *contraction*
+    axis (axis ``-2`` of a ``(..., K, N)`` weight): one f32 scale per output
+    channel, ``w ≈ q * scale`` with ``scale`` broadcastable against ``q``.
+    Because the scale is constant along K, dequantization commutes with the
+    GEMM and becomes a per-column epilogue: ``x @ w ≈ (x @ q) * scale`` —
+    the "dequant-in-kernel" form the ``xla_int8`` registry impls use.
+  * **int4, grouped** — symmetric ±7 quantization with one scale per
+    ``group_size`` rows of K per output channel; two values are packed per
+    byte along K.  The scale varies along the contraction axis, so int4
+    dequantizes *before* the GEMM (weights-only compression: the memory
+    multiplier is the point, the MACs stay fp).
+
+``QTensor`` is a registered pytree (with key paths, so checkpoints name its
+leaves ``<param>.q`` / ``<param>.scale``): it flows through ``jax.jit``,
+``vmap`` closures, device_put, and ``checkpoint.save/restore`` like any
+other params leaf.  The int8 payload round-trips checkpoints bit-exactly.
+
+The KV-cache variant (:func:`quantize_kv`) is per-token-per-head — one
+scale per written cache row — and is jit-safe (no host checks), since it
+runs inside the decode step.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "QTensor", "is_qtensor", "quantize", "dequantize", "quantize_kv",
+    "quantize_tree", "dequantize_tree", "tree_bytes", "QUANT_PARAM_NAMES",
+]
+
+_TINY = float(np.finfo(np.float32).tiny)
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class QTensor:
+    """Packed values + scales.  ``q``/``scale`` are the dynamic children;
+    ``bits`` (8 | 4), ``dtype`` (logical compute dtype string) and ``rows``
+    (logical size of the contraction axis; None for int8, where it equals
+    ``q.shape[-2]``) are static aux data.
+    """
+
+    __slots__ = ("q", "scale", "bits", "dtype", "rows")
+
+    def __init__(self, q, scale, *, bits: int = 8, dtype: str = "float32",
+                 rows: Optional[int] = None):
+        self.q = q
+        self.scale = scale
+        self.bits = int(bits)
+        self.dtype = str(dtype)
+        self.rows = None if rows is None else int(rows)
+
+    # ------------------------------------------------------------- pytree
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("q"), self.q),
+                 (jax.tree_util.GetAttrKey("scale"), self.scale)),
+                (self.bits, self.dtype, self.rows))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        bits, dtype, rows = aux
+        q, scale = children
+        return cls(q, scale, bits=bits, dtype=dtype, rows=rows)
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (dequantized) shape."""
+        s = tuple(self.q.shape)
+        if self.bits == 4:
+            rows = self.rows if self.rows is not None else 2 * s[-2]
+            return s[:-2] + (rows,) + s[-1:]
+        return s
+
+    @property
+    def ndim(self) -> int:
+        return len(self.q.shape)
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.q.nbytes) + int(self.scale.nbytes)
+
+    def __repr__(self) -> str:
+        return (f"QTensor(int{self.bits}, shape={self.shape}, "
+                f"dtype={self.dtype}, nbytes={self.nbytes})")
+
+
+def is_qtensor(x: Any) -> bool:
+    return isinstance(x, QTensor)
+
+
+# ---------------------------------------------------------------- quantize
+
+
+def _check_finite(w) -> None:
+    if isinstance(w, jax.core.Tracer):
+        return
+    arr = np.asarray(w, np.float32)
+    if not np.isfinite(arr).all():
+        raise ValueError(
+            "quantize: input contains NaN/Inf — a non-finite value would "
+            "poison the channel scale (amax) and silently zero the whole "
+            "channel; clean the weights first")
+
+
+def _quantize_int8(w: jax.Array, dtype: str) -> QTensor:
+    wf = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(wf), axis=-2, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, _TINY)       # scale > 0 always
+    q = jnp.clip(jnp.round(wf / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale, bits=8, dtype=dtype)
+
+
+def _quantize_int4(w: jax.Array, group_size: int, dtype: str) -> QTensor:
+    rows = w.shape[-2]
+    g = max(2, min(int(group_size), rows))
+    g += g % 2                                     # even: packing pairs rows
+    pad = (-rows) % g
+    wf = w.astype(jnp.float32)
+    if pad:
+        widths = [(0, 0)] * w.ndim
+        widths[-2] = (0, pad)
+        wf = jnp.pad(wf, widths)
+    kp = rows + pad
+    lead = wf.shape[:-2]
+    n = wf.shape[-1]
+    grouped = wf.reshape(lead + (kp // g, g, n))
+    amax = jnp.max(jnp.abs(grouped), axis=-2)      # (..., K/g, N)
+    scale = jnp.maximum(amax / 7.0, _TINY)
+    q = jnp.clip(jnp.round(grouped / scale[..., None, :]), -7, 7)
+    q = q.reshape(lead + (kp, n)).astype(jnp.int8)
+    lo = (q[..., 0::2, :] & 0xF).astype(jnp.uint8)
+    hi = (q[..., 1::2, :] & 0xF).astype(jnp.uint8)
+    packed = lo | (hi << 4)
+    return QTensor(packed, scale, bits=4, dtype=dtype, rows=rows)
+
+
+def quantize(w, bits: int = 8, *, group_size: int = 32,
+             dtype: Optional[str] = None) -> QTensor:
+    """Quantize a weight ``(..., K, N)`` along the contraction axis.
+
+    ``bits=8``: per-channel symmetric int8, scale ``(..., 1, N)``.
+    ``bits=4``: grouped symmetric int4 (±7), ``group_size`` rows per scale,
+    packed two values per byte along K.
+
+    Rejects non-finite inputs (offline converter semantics — use
+    :func:`quantize_kv` for the jit-safe activation path).
+    """
+    if bits not in (8, 4):
+        raise ValueError(f"bits must be 8 or 4, got {bits}")
+    if getattr(w, "ndim", 0) < 2:
+        raise ValueError(f"quantize expects a (..., K, N) weight, "
+                         f"got shape {getattr(w, 'shape', ())}")
+    _check_finite(w)
+    w = jnp.asarray(w)
+    ldtype = dtype or str(w.dtype)
+    if bits == 8:
+        return _quantize_int8(w, ldtype)
+    return _quantize_int4(w, group_size, ldtype)
+
+
+def dequantize(qt: QTensor, dtype=None) -> jax.Array:
+    """QTensor -> dense array in ``dtype`` (default: the logical dtype)."""
+    if qt.bits == 8:
+        w = qt.q.astype(jnp.float32) * qt.scale
+    else:
+        packed = qt.q
+        lo = (packed & 0xF).astype(jnp.int8)
+        hi = (packed >> 4).astype(jnp.int8)
+        lo = lo - 16 * (lo >= 8)                  # sign-extend the nibble
+        hi = hi - 16 * (hi >= 8)
+        lead = packed.shape[:-2]
+        n = packed.shape[-1]
+        kp = 2 * packed.shape[-2]
+        q = jnp.stack([lo, hi], axis=-2)          # (..., K/2, 2, N)
+        q = q.reshape(lead + (kp, n)).astype(jnp.float32)
+        ng = qt.scale.shape[-2]
+        g = kp // ng
+        w = (q.reshape(lead + (ng, g, n))
+             * qt.scale[..., :, None, :]).reshape(lead + (kp, n))
+        rows = qt.rows if qt.rows is not None else kp
+        if rows != kp:
+            w = w[..., :rows, :]
+    return w.astype(dtype or qt.dtype)
+
+
+# ------------------------------------------------------------------ KV cache
+
+
+def quantize_kv(x: jax.Array):
+    """Per-row (token × head) symmetric int8: ``(..., D)`` ->
+    ``(q int8 (..., D), scale f32 (..., 1))``.  jit-safe (no host checks);
+    an all-zero row keeps a tiny positive scale and dequantizes to exact
+    zeros.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax / 127.0, _TINY)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+# -------------------------------------------------------------------- trees
+
+# Weight names that flow through ``unified_linear`` / ``moe_grouped_gemm``
+# dispatch (attention projections, MLPs, MoE experts + shared experts, LM /
+# task heads, patch embed, recurrent up/down projections).  Gates, biases,
+# norms, embeddings, and convs are deliberately absent: they are either
+# consumed by raw einsums/takes or too small to matter.
+QUANT_PARAM_NAMES = frozenset({
+    "wq", "wk", "wv", "wo", "w", "wg", "wu", "wd", "w1", "w2",
+    "shared_wg", "shared_wu", "shared_wd", "w_up", "w_up2", "w_down",
+    "w_qkv",
+})
+
+
+def _quantizable(name: str, leaf, names) -> bool:
+    return (name in names and not is_qtensor(leaf)
+            and getattr(leaf, "ndim", 0) >= 2
+            and jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating))
+
+
+def quantize_tree(tree, bits: int = 8, *, group_size: int = 32,
+                  names=QUANT_PARAM_NAMES):
+    """Offline converter: replace every matmul-weight leaf (dict key in
+    ``names``, ndim >= 2, floating) with a :class:`QTensor`.  Everything
+    else — gates, biases, norms, embeddings — passes through untouched.
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (quantize(v, bits, group_size=group_size)
+                        if _quantizable(k, v, names) else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+    return walk(tree)
+
+
+def dequantize_tree(tree):
+    """Inverse of :func:`quantize_tree` (lossy: returns the dequantized
+    weights in their logical dtype)."""
+    return jax.tree.map(
+        lambda x: dequantize(x) if is_qtensor(x) else x, tree,
+        is_leaf=is_qtensor)
+
+
+def tree_bytes(tree) -> int:
+    """Total storage bytes of a params tree (QTensor leaves count packed)."""
+    return sum(int(x.nbytes) for x in jax.tree.leaves(tree))

@@ -78,14 +78,23 @@ class ServeConfig:
     # registry, so e.g. a pallas decode request over per-slot traced cache
     # positions falls back loudly (see ops.dispatch_report()).
     policy: Optional[ComputePolicy] = None
+    # KV-cache storage override ("none" | "int8"); None keeps the arch
+    # config's ``kv_quant``.  Pair with ``policy_named("xla_int8")`` so the
+    # int8 decode impl is a dispatch hit, not a fallback.
+    kv_quant: Optional[str] = None
 
 
 def _policy_override(cfg: ArchConfig, scfg: ServeConfig) -> ArchConfig:
-    if scfg.policy is None:
-        return cfg
+    """Apply the serve-level compute overrides (policy + KV quantization)
+    onto the arch config the jitted steps are built from."""
     from dataclasses import replace
 
-    return replace(cfg, policy=scfg.policy)
+    over = {}
+    if scfg.policy is not None:
+        over["policy"] = scfg.policy
+    if scfg.kv_quant is not None:
+        over["kv_quant"] = scfg.kv_quant
+    return replace(cfg, **over) if over else cfg
 
 
 class ServingEngine:

@@ -35,8 +35,15 @@ from repro.core import routing as R
 from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
                             group_shape)
 from repro.core.unified_linear import unified_linear
+from repro.quant import QTensor, is_qtensor
 
 __all__ = ["ExpertUsage", "ExpertCache", "PagedMoE"]
+
+
+def _per_expert_bytes(host: dict) -> int:
+    """Device bytes one expert occupies across all weight leaves — the unit
+    of both paging accounting and byte-budget residency sizing."""
+    return sum(int(w[0].nbytes) for w in host.values())
 
 
 class ExpertUsage:
@@ -113,7 +120,7 @@ class ExpertCache:
             lambda slots, new, r: {
                 n: slots[n].at[r].set(new[n]) for n in slots},
             donate_argnums=(0,))
-        self._expert_bytes = sum(int(w[0].nbytes) for w in self.host.values())
+        self._expert_bytes = _per_expert_bytes(self.host)
 
     # -------------------------------------------------------------- state
 
@@ -201,14 +208,39 @@ class PagedMoE:
     def __init__(self, params, cfg: MoEConfig,
                  resident_fraction: float = 0.5,
                  usage: Optional[ExpertUsage] = None,
-                 usage_decay: float = 0.9):
+                 usage_decay: float = 0.9,
+                 budget_bytes: Optional[int] = None):
         if cfg.impl not in ("grouped", "onehot"):
             raise ValueError("PagedMoE serves the single-device paths")
         self.cfg = cfg
         names = expert_param_names(cfg)
-        host = {n: np.asarray(params[n]) for n in names}
-        max_resident = max(cfg.top_k,
-                           int(np.ceil(resident_fraction * cfg.num_experts)))
+        # quantized expert weights page as their packed leaves (<name>.q /
+        # <name>.scale): the cache store stays plain arrays, and the wave
+        # rebuilds QTensors from the device slots (``_slot_params``) so the
+        # grouped GEMM dispatches the xla_int8 impl.  Packed residency is
+        # the memory multiplier: ~4× (int8) / ~8× (int4) more experts fit
+        # the same device budget.
+        self._names = names
+        self._qmeta: dict[str, tuple] = {}
+        host: dict[str, np.ndarray] = {}
+        for n in names:
+            wn = params[n]
+            if is_qtensor(wn):
+                host[n + ".q"] = np.asarray(wn.q)
+                host[n + ".scale"] = np.asarray(wn.scale)
+                self._qmeta[n] = (wn.bits, wn.dtype, wn.rows)
+            else:
+                host[n] = np.asarray(wn)
+        per_expert = _per_expert_bytes(host)
+        if budget_bytes is not None:
+            # device budget in bytes -> resident slots (≥ top_k so one
+            # wave can always serve a token's full expert set)
+            max_resident = max(cfg.top_k,
+                               int(budget_bytes) // max(per_expert, 1))
+        else:
+            max_resident = max(cfg.top_k,
+                               int(np.ceil(resident_fraction
+                                           * cfg.num_experts)))
         self.usage = usage or ExpertUsage(cfg.num_experts, cfg.num_tasks,
                                           decay=usage_decay)
         self.cache = ExpertCache(host, max_resident, usage=self.usage)
@@ -220,6 +252,20 @@ class PagedMoE:
         self._route_fn = None
         self._wave_fn = None
         self._finish_fn = None
+
+    def _slot_params(self, slots):
+        """Rebuild the per-expert params dict from device slot arrays,
+        re-wrapping quantized leaves as QTensors (jit-safe: QTensor is a
+        pytree of the slot tracers)."""
+        out = {}
+        for n in self._names:
+            if n in self._qmeta:
+                bits, dt, rows = self._qmeta[n]
+                out[n] = QTensor(slots[n + ".q"], slots[n + ".scale"],
+                                 bits=bits, dtype=dt, rows=rows)
+            else:
+                out[n] = slots[n]
+        return out
 
     # ------------------------------------------------------- jitted stages
 
@@ -254,7 +300,7 @@ class PagedMoE:
                     probs=r.probs)
                 buf = R.dispatch(xg, r_w, rs, capacity)
                 sizes = R.dispatch_counts(r_w, rs)
-                out = _expert_ffn(slots, cfg, buf, sizes)
+                out = _expert_ffn(self._slot_params(slots), cfg, buf, sizes)
                 ef = r_w.expert.reshape(-1)
                 pf = jnp.minimum(r_w.position.reshape(-1), capacity - 1)
                 got = out[ef, pf]                      # (T*k, d)

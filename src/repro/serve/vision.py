@@ -43,7 +43,8 @@ class M3ViTServer:
     """
 
     def __init__(self, cfg: ArchConfig, params,
-                 resident_fraction: float = 0.5):
+                 resident_fraction: float = 0.5,
+                 expert_budget_bytes: Optional[int] = None):
         if cfg.family != "vit-moe":
             raise ValueError("M3ViTServer serves the vit-moe family")
         self.cfg = cfg
@@ -62,9 +63,13 @@ class M3ViTServer:
             else:
                 lp = params["rest"][i - n_scan * period]
             self.layer_params.append(lp)
+        # expert_budget_bytes (per MoE layer) beats resident_fraction when
+        # given: quantized expert weights then fit ~4× more resident
+        # experts into the same device budget (the hit-rate win)
         self.paged = {
             i: PagedMoE(self.layer_params[i]["moe"], self.mcfg,
-                        resident_fraction=resident_fraction)
+                        resident_fraction=resident_fraction,
+                        budget_bytes=expert_budget_bytes)
             for i, kind in enumerate(self.kinds) if kind == "attn_moe"
         }
 
@@ -196,9 +201,11 @@ class VisionBackend:
     """Scheduler backend serving M³ViT semseg/depth through task buckets."""
 
     def __init__(self, cfg: ArchConfig, params,
-                 resident_fraction: float = 0.5):
+                 resident_fraction: float = 0.5,
+                 expert_budget_bytes: Optional[int] = None):
         self.server = M3ViTServer(cfg, params,
-                                  resident_fraction=resident_fraction)
+                                  resident_fraction=resident_fraction,
+                                  expert_budget_bytes=expert_budget_bytes)
         self.num_tasks = len(MV.TASKS)
         self.usage = None   # per-layer usage lives inside each PagedMoE
 

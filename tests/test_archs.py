@@ -46,7 +46,10 @@ class TestArchSmoke:
     def test_train_step(self, arch):
         cfg = configs.get(arch, smoke=True)
         if cfg.vocab_size == 0:
-            pytest.skip("vit trunk trained via models/vit.py (test_vit)")
+            # vit trunk: no LM loss — train through the multi-task head
+            # path instead of skipping (real gradient-flow assertions)
+            self._vit_trunk_train_step(cfg)
+            return
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         tcfg = TrainConfig(opt=OptConfig(lr=1e-3, warmup_steps=2,
                                          total_steps=10))
@@ -62,10 +65,43 @@ class TestArchSmoke:
             params, p1)
         assert max(jax.tree.leaves(delta)) > 0
 
+    def _vit_trunk_train_step(self, cfg):
+        """One semseg gradient step on the M³ViT trunk: loss finite,
+        gradients flow into trunk + MoE experts + head, params move."""
+        from repro.configs import m3vit as MV
+        from repro.models import vit as V
+
+        k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+        params = V.init_params(k0, cfg)
+        imgs = jax.random.normal(k1, (2, MV.IMAGE_H, MV.IMAGE_W, 3),
+                                 jnp.float32)
+        labels = jax.random.randint(k2, (2, MV.IMAGE_H, MV.IMAGE_W), 0,
+                                    MV.NUM_SEG_CLASSES)
+        (loss, (task_loss, aux)), grads = jax.value_and_grad(
+            V.multitask_loss, has_aux=True)(params, imgs, labels, cfg,
+                                            "semseg")
+        assert np.isfinite(float(loss)) and np.isfinite(float(task_loss))
+        # gradients reach the expert weights and the task head
+        gmoe = grads["layers"]["b1"]["moe"]["w1"]
+        ghead = grads["heads"]["semseg"]["w"]
+        assert float(jnp.max(jnp.abs(gmoe.astype(jnp.float32)))) > 0
+        assert float(jnp.max(jnp.abs(ghead.astype(jnp.float32)))) > 0
+        p1 = jax.tree.map(
+            lambda p, g: p - 1e-3 * g.astype(p.dtype), params, grads)
+        delta = jax.tree.leaves(jax.tree.map(
+            lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32)
+                                               - b.astype(jnp.float32)))),
+            params, p1))
+        assert max(delta) > 0
+
     def test_decode_step(self, arch):
         cfg = configs.get(arch, smoke=True)
         if cfg.vocab_size == 0:
-            pytest.skip("encoder trunk has no decode step")
+            # encoder trunk: the serving analogue of a decode step is the
+            # last-position head read — assert it (plus both task heads)
+            # instead of skipping
+            self._vit_trunk_serving_step(cfg)
+            return
         params = M.init_params(jax.random.PRNGKey(0), cfg)
         b, max_len = 2, 32
         state = M.init_state(cfg, b, max_len)
@@ -87,6 +123,33 @@ class TestArchSmoke:
                                        return_state=True)
         assert logits2.shape == (b, 1, cfg.vocab_size)
         assert not bool(jnp.isnan(logits2).any())
+
+    def _vit_trunk_serving_step(self, cfg):
+        from repro.configs import m3vit as MV
+        from repro.models import vit as V
+
+        k0, k1 = jax.random.split(jax.random.PRNGKey(0))
+        params = V.init_params(k0, cfg)
+        x = jax.random.normal(k1, (2, 16, cfg.d_model),
+                              cfg.activation_dtype)
+        feats, _, _ = M.forward(params, x, cfg)
+        assert feats.shape == (2, 16, cfg.d_model)
+        assert not bool(jnp.isnan(feats).any())
+        # logits_mode="last" (the decode-read path) matches the full pass
+        last, _, _ = M.forward(params, x, cfg, logits_mode="last")
+        np.testing.assert_allclose(
+            np.asarray(last, np.float32),
+            np.asarray(feats[:, -1:], np.float32), atol=1e-5, rtol=1e-5)
+        # both task heads produce dense finite predictions — but only
+        # over full-geometry token grids, so feed a real image
+        img = jax.random.normal(k1, (1, MV.IMAGE_H, MV.IMAGE_W, 3),
+                                jnp.float32)
+        seg, _ = V.forward(params, img, cfg, "semseg")
+        dep, _ = V.forward(params, img, cfg, "depth")
+        assert seg.shape == (1, MV.IMAGE_H, MV.IMAGE_W, MV.NUM_SEG_CLASSES)
+        assert dep.shape == (1, MV.IMAGE_H, MV.IMAGE_W)
+        assert np.isfinite(np.asarray(seg)).all()
+        assert np.isfinite(np.asarray(dep)).all()
 
 
 class TestConfigIntegrity:

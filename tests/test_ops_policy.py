@@ -275,6 +275,12 @@ ODD_ATTN_SHAPES = [
 ]
 
 
+def _fp_impls(op):
+    """Registered impls that serve fp operands — the quantized impls
+    require QTensor inputs and have their own parity sweep below."""
+    return [n for n in ops.registered(op) if not n.startswith("xla_int")]
+
+
 class TestCrossImplAgreement:
     """Property-style sweep: all registered impls of each op agree on odd
     shapes (the acceptance-criteria invariant behind the kernel matrix)."""
@@ -283,7 +289,7 @@ class TestCrossImplAgreement:
     def test_attention(self, rng, shape):
         q, k, v = mkqkv(rng, *shape)
         outs = {}
-        for impl in ops.registered("attention"):
+        for impl in _fp_impls("attention"):
             with ops.use_policy(attention=impl):
                 outs[impl] = np.asarray(A.attention(q, k, v, causal=True))
         base = outs.pop("ref")
@@ -300,7 +306,7 @@ class TestCrossImplAgreement:
         vc = jnp.asarray(rng.normal(size=(b, hkv, smax, d)), jnp.float32)
         cl = jnp.full((b,), length, jnp.int32)
         outs = {}
-        for impl in ops.registered("attention_decode"):
+        for impl in _fp_impls("attention_decode"):
             ops.reset_dispatch_report()
             with ops.use_policy(attention_decode=impl):
                 outs[impl] = np.asarray(
@@ -323,7 +329,7 @@ class TestCrossImplAgreement:
         w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
         b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
         outs = {}
-        for impl in ops.registered("linear"):
+        for impl in _fp_impls("linear"):
             with ops.use_policy(linear=impl):
                 outs[impl] = np.asarray(
                     unified_linear(x, w, b, activation=act))
@@ -378,7 +384,7 @@ class TestCrossImplAgreement:
         w = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
         sizes = jnp.asarray(rng.integers(1, c + 1, size=(e,)), jnp.int32)
         outs = {}
-        for impl in ops.registered("moe_grouped_gemm"):
+        for impl in _fp_impls("moe_grouped_gemm"):
             with ops.use_policy(moe_grouped_gemm=impl):
                 outs[impl] = np.asarray(
                     ops.dispatch("moe_grouped_gemm", buf, w, sizes))
@@ -399,6 +405,135 @@ class TestCrossImplAgreement:
         # LUT quantization bound (paper: max |err| < 2.5e-3)
         np.testing.assert_allclose(outs["pallas"], outs["lut"], atol=1e-6)
         np.testing.assert_allclose(outs["xla"], outs["lut"], atol=3e-3)
+
+
+# ==================================== quantized-impl parity (satellite)
+
+
+class TestQuantizedImplParity:
+    """int8/int4 impls vs the ref oracles on dequantized weights, at the
+    same odd/prime shapes as the fp sweeps, with dispatch-report HIT
+    assertions — a silent fp fallback fails the test."""
+
+    @pytest.mark.parametrize("mnk", [(7, 19, 33), (37, 41, 29),
+                                     (1, 257, 13)])
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_linear(self, rng, mnk, bits):
+        from repro.core.unified_linear import unified_linear
+        from repro.quant import dequantize, quantize
+
+        m, n, k = mnk
+        x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+        b = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+        qw = quantize(w, bits, group_size=8)
+        ops.reset_dispatch_report()
+        with ops.use_policy(ops.policy_named("xla_int8")):
+            got = np.asarray(unified_linear(x, qw, b, activation="gelu"))
+        rep = ops.dispatch_report()["linear"]
+        assert rep["hits"].get("xla_int8", 0) >= 1 and not rep["fallbacks"]
+        # the int8 epilogue dispatches the default LUT activation — give
+        # the oracle the same LUT so the GEMM parity is tight
+        want = np.asarray(ref.ref_linear(
+            x, dequantize(qw, jnp.float32), b, activation="gelu",
+            use_lut=True))
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+        cos = (got * want).sum() / np.sqrt(
+            (got * got).sum() * (want * want).sum())
+        assert cos >= 0.999999
+
+    @pytest.mark.parametrize("ecdf", [(3, 5, 33, 41), (5, 13, 24, 19)])
+    @pytest.mark.parametrize("bits", [8, 4])
+    def test_moe_grouped_gemm(self, rng, ecdf, bits):
+        from repro.quant import dequantize, quantize
+
+        e, c, d, f = ecdf
+        buf = jnp.asarray(rng.normal(size=(e, c, d)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(e, d, f)), jnp.float32)
+        qw = quantize(w, bits, group_size=8)
+        sizes = jnp.asarray(rng.integers(1, c + 1, size=(e,)), jnp.int32)
+        ops.reset_dispatch_report()
+        with ops.use_policy(ops.policy_named("xla_int8")):
+            got = np.asarray(
+                ops.dispatch("moe_grouped_gemm", buf, qw, sizes))
+        rep = ops.dispatch_report()["moe_grouped_gemm"]
+        assert rep["hits"].get("xla_int8", 0) >= 1 and not rep["fallbacks"]
+        # the int8 impl computes all experts densely (like xla); compare
+        # against the dense einsum on the dequantized weights
+        want = np.einsum("ecd,edf->ecf", np.asarray(buf),
+                         np.asarray(dequantize(qw, jnp.float32)))
+        np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+    @pytest.mark.parametrize("window", [None, 8])
+    @pytest.mark.parametrize("vector_len", [False, True])
+    def test_int8_kv_decode(self, rng, window, vector_len):
+        """int8 KV decode vs the ref oracle on the dequantized cache —
+        including the traced per-slot cache_len vector the pallas impl
+        rejects: the int8 impl must serve it as a HIT."""
+        from repro.quant import QTensor, quantize_kv
+
+        b, hq, hkv, smax, d = 2, 4, 2, 37, 24
+        q = jnp.asarray(rng.normal(size=(b, hq, 1, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, hkv, smax, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, hkv, smax, d)), jnp.float32)
+        kq, ks = quantize_kv(kc)
+        vq, vs = quantize_kv(vc)
+        kt = QTensor(kq, ks, dtype="float32")
+        vt = QTensor(vq, vs, dtype="float32")
+        cl = (jnp.asarray([13, 29], jnp.int32) if vector_len
+              else jnp.full((b,), 29, jnp.int32))
+        ops.reset_dispatch_report()
+        with ops.use_policy(attention_decode="xla_int8"):
+            got = jax.jit(lambda *a: A.decode_attention(
+                *a, window=window))(q, kt, vt, cl)
+        rep = ops.dispatch_report()["attention_decode"]
+        assert rep["hits"].get("xla_int8", 0) >= 1 and not rep["fallbacks"]
+        with ops.use_policy(attention_decode="ref"):
+            want = A.decode_attention(
+                q, kq.astype(jnp.float32) * ks, vq.astype(jnp.float32) * vs,
+                cl, window=window)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   atol=3e-5, rtol=3e-5)
+
+    def test_fp_weight_under_int8_policy_falls_back_loudly(self, rng):
+        from repro.core.unified_linear import unified_linear
+
+        x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)
+        ops.reset_dispatch_report()
+        with ops.use_policy(ops.policy_named("xla_int8")):
+            unified_linear(x, w)
+        rep = ops.dispatch_report()["linear"]
+        fb = [f for f in rep["fallbacks"] if f["requested"] == "xla_int8"]
+        assert fb and fb[0]["used"] == "xla"
+        assert any("not quantized" in r for r in fb[0]["reasons"])
+
+    def test_quantized_weight_under_fp_policy_falls_back_loudly(self, rng):
+        from repro.core.unified_linear import unified_linear
+        from repro.quant import quantize
+
+        x = jnp.asarray(rng.normal(size=(4, 8)), jnp.float32)
+        qw = quantize(jnp.asarray(rng.normal(size=(8, 8)), jnp.float32))
+        ops.reset_dispatch_report()
+        with ops.use_policy(ops.policy_named("pallas")):
+            unified_linear(x, qw)
+        rep = ops.dispatch_report()["linear"]
+        fb = [f for f in rep["fallbacks"] if f["requested"] == "pallas"]
+        assert fb and fb[0]["used"] == "xla_int8"
+        assert any("QTensor" in r for r in fb[0]["reasons"])
+
+    def test_fp_kv_under_int8_policy_falls_back_loudly(self, rng):
+        b, hkv, smax, d = 2, 2, 16, 8
+        q = jnp.asarray(rng.normal(size=(b, 4, 1, d)), jnp.float32)
+        kc = jnp.asarray(rng.normal(size=(b, hkv, smax, d)), jnp.float32)
+        vc = jnp.asarray(rng.normal(size=(b, hkv, smax, d)), jnp.float32)
+        ops.reset_dispatch_report()
+        with ops.use_policy(attention_decode="xla_int8"):
+            A.decode_attention(q, kc, vc, jnp.full((b,), 5, jnp.int32))
+        rep = ops.dispatch_report()["attention_decode"]
+        fb = [f for f in rep["fallbacks"] if f["requested"] == "xla_int8"]
+        assert fb and fb[0]["used"] == "xla"
+        assert any("not quantized" in r for r in fb[0]["reasons"])
 
 
 # ===================================================== policy-through-model
