@@ -6,6 +6,9 @@
   table5_ablation    — Table V   (cumulative technique ablation on M³ViT)
   fig12_breakdown    — Fig. 12   (per-component latency/cost breakdown)
   serve_throughput   — continuous batching vs static serving
+  serve_dist         — mesh sweep (1/2/4/8 host-device shards): paged
+                       M³ViT tok/s + expert-cache hit rate at a fixed
+                       per-device expert budget, JSON acceptance artifact
   ops_dispatch       — M³ViT tokens/s per compute policy (xla / blocked /
                        pallas-interpret), JSON artifact w/ dispatch report
   quant_memory       — int8/int4 expert-weight bytes, cosine vs fp32,
@@ -23,7 +26,7 @@ from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
            "table5_ablation", "fig12_breakdown", "serve_throughput",
-           "ops_dispatch", "quant_memory"]
+           "serve_dist", "ops_dispatch", "quant_memory"]
 
 
 def main() -> int:

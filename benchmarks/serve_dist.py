@@ -1,0 +1,15 @@
+"""Distributed serving benchmark — the mesh sweep of ``serve_throughput``.
+
+Paged M³ViT serving at mesh sizes 1/2/4/8 (forced host CPU shards, one
+subprocess per size) with a FIXED per-device expert-weight budget:
+expert parallelism must raise both aggregate patch tok/s (≥ 2× at mesh 4)
+and the expert-cache hit rate vs mesh 1.  See
+``serve_throughput.run_mesh_sweep`` for the implementation and the
+``bench/serve_dist.json`` artifact schema.
+"""
+
+from benchmarks.serve_throughput import run_mesh_sweep
+
+
+def run(quick: bool = False):
+    return run_mesh_sweep(quick=quick)

@@ -18,12 +18,26 @@ subset, the paper's §IV-F regime, where usage-driven prefetch pays off).
 
 Emits CSV rows through the harness and writes a JSON artifact for the CI
 benchmark trajectory (``BENCH_JSON`` env var overrides the path).
+
+``run_mesh_sweep`` (registered as the ``serve_dist`` benchmark) extends
+this with the DISTRIBUTED serving trajectory: the paged M³ViT server at
+mesh sizes 1/2/4/8 (forced host CPU shards, one subprocess per mesh so
+each gets its own jax device count), at a FIXED per-device expert-weight
+byte budget.  Expert parallelism over the ``model`` axis means each mesh
+size holds ``shards ×`` more experts resident in the same per-device
+budget, so both the aggregate patch tok/s (fewer sequential expert waves,
+less demand paging) and the expert-cache hit rate must rise with the mesh
+— the acceptance flags in ``bench/serve_dist.json`` record exactly that
+(mesh 4 ≥ 2× mesh-1 tok/s, strictly higher hit rate).
 """
 
 from __future__ import annotations
 
 import json
 import os
+import subprocess
+import sys
+import textwrap
 import time
 from dataclasses import replace
 
@@ -37,6 +51,10 @@ from repro.serve import LMBackend, Request, Scheduler, ServeConfig, ServingEngin
 JSON_PATH = os.environ.get(
     "BENCH_JSON",
     os.path.join(os.path.dirname(__file__), "out", "serve_throughput.json"))
+
+DIST_JSON_PATH = os.environ.get(
+    "BENCH_DIST_JSON",
+    os.path.join(os.path.dirname(__file__), "out", "serve_dist.json"))
 
 
 def _lm_workload(n, num_tasks, prompt_len, vocab, rng,
@@ -252,4 +270,143 @@ def run(quick: bool = False):
           f"{out['vision_uniform']['expert_cache']['hit_rate']:.2f} "
           f"task_sparse="
           f"{out['vision_task_sparse']['expert_cache']['hit_rate']:.2f}")
+    return rows
+
+
+# ------------------------------------------------------ mesh sweep (dist)
+
+_MESH_CHILD = textwrap.dedent("""
+    import os, sys
+    n = int(sys.argv[1]); iters = int(sys.argv[2])
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ["JAX_PLATFORMS"] = "cpu"
+    import json, time
+    import jax, numpy as np
+    from repro import configs
+    from repro.dist.sharding import ShardingRules
+    from repro.models import vit as V
+    from repro.serve.vision import M3ViTServer
+
+    from dataclasses import replace
+    cfg = configs.get("m3vit", smoke=True)
+    # smoke trunk, serving-scale expert pool: 64 experts at smoke width.
+    # This is the regime where serving time is dominated by expert-wave
+    # dispatch and demand paging rather than raw FLOPs — host-device
+    # shards share one physical CPU, so compute-bound work cannot show
+    # aggregate scaling; the paging and wave-count overheads that expert
+    # parallelism removes can (and on real shards the FFN waves would
+    # additionally run concurrently)
+    cfg = replace(cfg, moe=replace(cfg.moe, num_experts=64, d_ff=1024))
+    params = V.init_params(jax.random.PRNGKey(0), cfg)
+    mesh = jax.make_mesh((1, n), ("data", "model")) if n > 1 else None
+    # hybrid placement (the M3ViT/UbiMoE co-design split): the tiny dense
+    # trunk replicates, ONLY the expert banks partition — every mesh size
+    # pays an identical trunk cost and the measured delta is pure expert
+    # serving: sequential wave count + demand paging volume
+    from repro.core.moe import expert_param_names
+    from repro.models import transformer as T
+    from repro.serve.expert_cache import _per_expert_bytes
+    # per-expert device bytes straight from one MoE layer's stacked leaves
+    # (layer b1 is the first attn_moe block; [0] drops the scan axis) — no
+    # throwaway fully-resident server needed just to read this number
+    per_expert = _per_expert_bytes({
+        name: np.asarray(params["layers"]["b1"]["moe"][name][0])
+        for name in expert_param_names(T.moe_config(cfg))})
+    # fixed PER-DEVICE budget of 16 expert slots (a quarter of the
+    # pool).  Mesh 1 drags the 64-expert working set through 16 slots: 4
+    # sequential waves + ~48 demand page-ins per MoE layer per batch.
+    # Mesh 4 holds all 64 resident (4 shards x 16 slots): one wave, zero
+    # steady-state paging.
+    server = M3ViTServer(cfg, params,
+                         expert_budget_bytes=16 * per_expert,
+                         ep_mesh=mesh)
+    # pre-patchified inputs (the serving path also accepts embeddings);
+    # per-image tokens = the paper's 128 patches
+    toks_per_img = 128
+    imgs = np.asarray(jax.random.normal(
+        jax.random.PRNGKey(1), (2, toks_per_img, cfg.d_model)), np.float32)
+    for t in (0, 1, 0, 1):          # warm: compiles + cache/EMA warm-in
+        server.infer(imgs, t)
+    for paged in server.paged.values():
+        paged.cache.reset_stats()
+    # best-of-rounds: the shared-CPU shards make wall time sensitive to
+    # system load; the minimum round is the structural cost (standard
+    # microbenchmark practice) and is what the acceptance flags compare
+    rounds = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        for t in (0, 1):
+            server.infer(imgs, t)
+        rounds.append(time.perf_counter() - t0)
+    # second-smallest round: robust to a single lucky/unlucky sample on
+    # the shared-CPU shards
+    best = sorted(rounds)[1] if len(rounds) > 1 else rounds[0]
+    per_round = 2 * imgs.shape[0]
+    images = iters * per_round
+    cache = server.cache_stats()
+    first = next(iter(server.paged.values())).cache
+    print("RESULT " + json.dumps({
+        "mesh": n,
+        "images": images,
+        "seconds": sum(rounds),
+        "round_seconds": rounds,
+        "items_per_s": per_round / best,
+        "tok_per_s": per_round * toks_per_img / best,
+        "hit_rate": cache["hit_rate"],
+        "bytes_paged": cache["bytes_paged"],
+        "resident_slots_per_device": first.max_resident,
+        "resident_slots_total": getattr(first, "total_slots",
+                                        first.max_resident),
+    }))
+""")
+
+
+def run_mesh_sweep(quick: bool = False):
+    """Distributed-serving benchmark (registered as ``serve_dist``).
+
+    One subprocess per mesh size (the forced host device count must be set
+    before jax initializes), all at the same per-device expert budget.
+    Writes ``serve_dist.json`` (override via ``BENCH_DIST_JSON``) with the
+    acceptance flags; raises if the scaling contract breaks.
+    """
+    sizes = (1, 4) if quick else (1, 2, 4, 8)
+    iters = 4 if quick else 10
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    results = {}
+    for n in sizes:
+        r = subprocess.run(
+            [sys.executable, "-c", _MESH_CHILD, str(n), str(iters)],
+            capture_output=True, text=True, timeout=900,
+            env={**os.environ, "PYTHONPATH": "src"}, cwd=repo)
+        if r.returncode != 0:
+            raise RuntimeError(f"mesh {n} child failed: {r.stderr[-2000:]}")
+        line = [l for l in r.stdout.splitlines()
+                if l.startswith("RESULT ")][-1]
+        results[n] = json.loads(line[len("RESULT "):])
+        print(f"[serve_dist] mesh {n}: "
+              f"{results[n]['tok_per_s']:.0f} tok/s, "
+              f"hit_rate {results[n]['hit_rate']:.2f}, "
+              f"{results[n]['resident_slots_total']} resident slots")
+    m1, m4 = results[1], results[4]
+    out = {
+        "quick": bool(quick),
+        "arch": "m3vit",
+        "budget": "16 expert slots per device",
+        "meshes": {str(n): results[n] for n in sizes},
+        "tok_per_s_ratio_mesh4_vs_1": m4["tok_per_s"] / m1["tok_per_s"],
+        "accept_tok_per_s_2x": m4["tok_per_s"] >= 2.0 * m1["tok_per_s"],
+        "accept_hit_rate_up": m4["hit_rate"] > m1["hit_rate"],
+    }
+    os.makedirs(os.path.dirname(DIST_JSON_PATH), exist_ok=True)
+    with open(DIST_JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"[serve_dist] wrote {DIST_JSON_PATH}; mesh4/mesh1 tok/s "
+          f"{out['tok_per_s_ratio_mesh4_vs_1']:.2f}x, hit_rate "
+          f"{m1['hit_rate']:.2f} -> {m4['hit_rate']:.2f}")
+    if not (out["accept_tok_per_s_2x"] and out["accept_hit_rate_up"]):
+        raise RuntimeError(f"serve_dist acceptance failed: {out}")
+    rows = [(f"serve_dist_mesh{n}", 1e6 / max(results[n]["tok_per_s"], 1e-9),
+             f"tok_per_s={results[n]['tok_per_s']:.0f};"
+             f"hit_rate={results[n]['hit_rate']:.2f}")
+            for n in sizes]
     return rows

@@ -92,7 +92,10 @@ def build_delta_table(
 
 @functools.lru_cache(maxsize=None)
 def _cached_table(kind: str, step_log2: int, rng: float) -> np.ndarray:
-    # cache as NumPy (trace-safe); converted to a jnp constant at each use site
+    # cache as NumPy (trace-safe); converted to a jnp constant at each use
+    # site.  Host-side caching is load-bearing: an lru_cache over device
+    # arrays would pin the value to first-call placement and go stale once
+    # a mesh is active (see serve/engine._stub_embed_table)
     step = 2.0**step_log2
     n = int(rng / step)
     xs = np.arange(n, dtype=np.float64) * step

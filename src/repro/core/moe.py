@@ -36,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.core import routing as R
 from repro.core.unified_linear import unified_linear
+from repro.dist.sharding import constrain
 
 __all__ = ["MoEConfig", "init_moe", "apply_moe", "group_shape",
            "expert_param_names"]
@@ -248,6 +249,10 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0,
                 buf = R.dispatch_onehot(xg, r, cfg.num_experts, capacity)
             else:
                 buf = R.dispatch(xg, r, cfg.num_experts, capacity)
+            # expert-parallel layout under an active mesh: the (E, C, d)
+            # buffer shards over the model axis, turning dispatch/combine
+            # into the token all-to-all (no-op without rules)
+            buf = constrain(buf, "ecd")
         with jax.named_scope("moe_ffn"):
             out = _expert_ffn(params, cfg, buf, group_sizes)
         with jax.named_scope("moe_combine"):

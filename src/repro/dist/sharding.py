@@ -152,6 +152,10 @@ class ShardingRules:
             # KV cache (B, Hkv, S, hd): head-sharded when Hkv divides the
             # tensor axis, else fall back to batch-only
             "cache": [P(B, tp, None, None), P(B, None, None, None)],
+            # MoE dispatch buffers (E, C, d): expert-parallel over the
+            # tensor axis — the one-hot dispatch/combine einsums then lower
+            # to the token all-to-all (experts stay resident, tokens move)
+            "ecd": P(tp, None, None),
         }
 
         param_patterns = (
@@ -187,6 +191,13 @@ class ShardingRules:
             (r"mlstm/conv$",                P(None, tp)),
             (r"mlstm/w_if$",                P(F, None)),
             (r"slstm/r_gates$",             P(tp, None, None)),
+            # --- quantized (QTensor) leaves: packed values + per-channel
+            # scales flatten as <name>/q and <name>/scale.  Expert stacks
+            # keep the expert-dim layout (scales' unit dims trim to
+            # replicated); other quantized weights replicate — quantized
+            # serving is memory-bound, not weight-gather-bound
+            (r"moe/(wg|wu|wd|w1|w2)/(q|scale)$", P(tp, Fm, None)),
+            (r"/(q|scale)$",                P()),
             # --- norms / small vectors: replicated
             (r"(scale|bias|b_if|b_gates|gn_scale|lam|pos)$", P()),
         )

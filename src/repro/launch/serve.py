@@ -15,9 +15,62 @@ Usage:
   python -m repro.launch.serve --arch m3vit --smoke --scheduler --quant int8
   python -m repro.launch.serve --arch llama3_2_1b --smoke --quant int8 \
       --dispatch-report
+  # mesh serving ("DxM" = data x model): batch/KV state sharded over data,
+  # tensor/expert parallelism over model.  Off-TPU the devices are forced
+  # host (CPU) shards, same as dryrun / the dist tests:
+  python -m repro.launch.serve --arch llama3_2_1b --smoke --mesh 2x2
+  python -m repro.launch.serve --arch m3vit --smoke --scheduler --mesh 1x4
 """
 
 from __future__ import annotations
+
+import os
+import sys
+
+
+def _mesh_arg(argv) -> str | None:
+    for i, a in enumerate(argv):
+        if a == "--mesh" and i + 1 < len(argv):
+            return argv[i + 1]
+        if a.startswith("--mesh="):
+            return a.split("=", 1)[1]
+    return None
+
+
+def _parse_mesh(spec: str) -> tuple[int, int]:
+    try:
+        d, m = (int(v) for v in spec.lower().split("x"))
+    except ValueError:
+        raise SystemExit(f"--mesh expects DxM (e.g. 2x4), got {spec!r}")
+    if d < 1 or m < 1:
+        raise SystemExit(f"--mesh axes must be >= 1, got {spec!r}")
+    return d, m
+
+
+# --mesh needs its device count BEFORE jax initializes (jax locks the
+# device count at first init) — peek at argv and force host devices, the
+# same pattern launch/dryrun.py and the dist subprocess tests use.
+def _accelerators_likely() -> bool:
+    """Best-effort pre-jax-init accelerator detection: forcing host CPU
+    shards must not silently shadow real devices."""
+    if os.environ.get("JAX_PLATFORMS", "cpu").lower() not in ("", "cpu"):
+        return True
+    if os.environ.get("TPU_NAME") or os.environ.get("COLAB_TPU_ADDR"):
+        return True
+    return bool(os.environ.get("CUDA_VISIBLE_DEVICES", "").strip("- "))
+
+
+_MESH_SPEC = _mesh_arg(sys.argv)
+if _MESH_SPEC and __name__ == "__main__" and not _accelerators_likely():
+    _d, _m = _parse_mesh(_MESH_SPEC)
+    _flags = os.environ.get("XLA_FLAGS", "")
+    if _d * _m > 1 and "xla_force_host_platform_device_count" not in _flags:
+        # append rather than setdefault: a pre-existing unrelated
+        # XLA_FLAGS value must not silently disable device forcing
+        os.environ["XLA_FLAGS"] = (
+            f"{_flags} --xla_force_host_platform_device_count={_d * _m}"
+            .strip())
+        os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 import argparse
 import time
@@ -30,8 +83,8 @@ from repro.models import model as M
 from repro.serve import LMBackend, Request, Scheduler, ServeConfig, ServingEngine
 
 
-def _serve_scheduler_lm(cfg, params, scfg, args, key) -> int:
-    backend = LMBackend(cfg, params, scfg)
+def _serve_scheduler_lm(cfg, params, scfg, args, key, rules=None) -> int:
+    backend = LMBackend(cfg, params, scfg, rules=rules)
     num_tasks = max(args.tasks, 1)
     if cfg.moe is not None:      # gate table bounds the task-id space
         num_tasks = min(num_tasks, backend.num_tasks)
@@ -60,7 +113,7 @@ def _serve_scheduler_lm(cfg, params, scfg, args, key) -> int:
     return 0
 
 
-def _serve_scheduler_vision(cfg, args) -> int:
+def _serve_scheduler_vision(cfg, args, rules=None) -> int:
     from repro.configs import m3vit as MV
     from repro.models import vit as V
     from repro.serve.vision import VisionBackend
@@ -72,7 +125,10 @@ def _serve_scheduler_vision(cfg, args) -> int:
         from repro.quant import quantize_tree
         params = quantize_tree(params, bits=8 if args.quant == "int8" else 4)
     backend = VisionBackend(cfg, params,
-                            resident_fraction=args.resident_fraction)
+                            resident_fraction=args.resident_fraction,
+                            expert_budget_bytes=args.expert_budget_bytes
+                            or None,
+                            rules=rules)
     sched = Scheduler(backend, total_slots=args.batch, quantum=1,
                       num_tasks=len(MV.TASKS))
     imgs = np.asarray(jax.random.normal(
@@ -115,6 +171,15 @@ def main() -> int:
                     help="scheduler mode: number of gating tasks")
     ap.add_argument("--resident-fraction", type=float, default=0.5,
                     help="vision scheduler: fraction of experts resident")
+    ap.add_argument("--mesh", default=None,
+                    help="DxM mesh (data x model), e.g. 2x2: serve state "
+                         "sharded over data, tensor/expert parallelism "
+                         "over model.  Off-TPU this forces DxM host "
+                         "(CPU) devices before jax init")
+    ap.add_argument("--expert-budget-bytes", type=int, default=0,
+                    help="vision scheduler: per-device expert-weight byte "
+                         "budget (0 = use --resident-fraction); each mesh "
+                         "model-shard holds its own budget's worth")
     ap.add_argument("--policy", default=None,
                     choices=["xla", "blocked", "pallas", "ref", "xla_int8"],
                     help="compute policy for every serving step (default: "
@@ -128,6 +193,23 @@ def main() -> int:
     args = ap.parse_args()
 
     from repro.ops import dispatch_report, policy_named
+
+    rules = None
+    if args.mesh:
+        from repro.dist.sharding import ShardingRules
+
+        d, m = _parse_mesh(args.mesh)
+        if d * m > jax.device_count():
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {d * m} devices, have "
+                f"{jax.device_count()} (host-device forcing happens only "
+                f"when run as a script; check XLA_FLAGS)")
+        mesh = jax.make_mesh((d, m), ("data", "model"))
+        # serving keeps dense weights replicated over data (no FSDP):
+        # decode is latency-bound and the weight gathers would dominate
+        rules = ShardingRules.for_mesh(mesh, fsdp=False)
+        print(f"[serve] mesh {d}x{m} (data x model) over "
+              f"{jax.device_count()} devices")
 
     cfg = configs.get(args.arch, smoke=args.smoke)
     policy = policy_named(args.policy) if args.policy else None
@@ -146,7 +228,7 @@ def main() -> int:
         if policy is not None:
             from dataclasses import replace
             cfg = replace(cfg, policy=policy)
-        rc = _serve_scheduler_vision(cfg, args)
+        rc = _serve_scheduler_vision(cfg, args, rules=rules)
         if args.dispatch_report:
             print("[serve] dispatch report:", dispatch_report())
         return rc
@@ -163,12 +245,13 @@ def main() -> int:
             from dataclasses import replace
             scfg = replace(scfg, temperature=0.0)
             print("[serve] scheduler decodes greedily; ignoring temperature")
-        rc = _serve_scheduler_lm(cfg, params, scfg, args, k_prompts)
+        rc = _serve_scheduler_lm(cfg, params, scfg, args, k_prompts,
+                                 rules=rules)
         if args.dispatch_report:
             print("[serve] dispatch report:", dispatch_report())
         return rc
 
-    engine = ServingEngine(cfg, params, scfg)
+    engine = ServingEngine(cfg, params, scfg, rules=rules)
     if cfg.embed_input == "tokens":
         prompts = jax.random.randint(
             k_prompts, (args.batch, args.prompt_len), 0, cfg.vocab_size)

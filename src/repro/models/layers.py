@@ -299,18 +299,24 @@ def apply_attention(params, x, cfg: ArchConfig, *, pos, causal=True,
 
 
 def init_attn_cache(cfg: ArchConfig, batch: int, max_len: int, dtype):
+    # "cache" constraints make an in-graph init (the scheduler's fused
+    # batch-1 admit prefill) come out mesh-sharded instead of replicated;
+    # outside a rules context they are identity
     hkv, hd = cfg.num_kv_heads, cfg.hd
     shape = (batch, hkv, max_len, hd)
     if cfg.kv_quant == "int8":
         sshape = (batch, hkv, max_len, 1)
-        return {"k": jnp.zeros(shape, jnp.int8),
-                "v": jnp.zeros(shape, jnp.int8),
-                "k_scale": jnp.zeros(sshape, jnp.float32),
-                "v_scale": jnp.zeros(sshape, jnp.float32)}
+        return {"k": constrain(jnp.zeros(shape, jnp.int8), "cache"),
+                "v": constrain(jnp.zeros(shape, jnp.int8), "cache"),
+                "k_scale": constrain(jnp.zeros(sshape, jnp.float32),
+                                     "cache"),
+                "v_scale": constrain(jnp.zeros(sshape, jnp.float32),
+                                     "cache")}
     if cfg.kv_quant != "none":
         raise ValueError(f"unknown kv_quant {cfg.kv_quant!r} "
                          "(expected none | int8)")
-    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {"k": constrain(jnp.zeros(shape, dtype), "cache"),
+            "v": constrain(jnp.zeros(shape, dtype), "cache")}
 
 
 # ---------------------------------------------------------------- embeddings

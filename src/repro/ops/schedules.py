@@ -33,6 +33,9 @@ _TABLE_PATH = os.path.join(os.path.dirname(__file__), "schedules.json")
 
 @functools.lru_cache(maxsize=None)
 def load_table(path: Optional[str] = None) -> dict:
+    # plain-dict cache (no device arrays) — safe to memoize across mesh
+    # changes, unlike lru_caches over jax.Arrays
+
     with open(path or _TABLE_PATH) as f:
         table = json.load(f)
     if "backends" not in table:

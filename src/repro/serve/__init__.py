@@ -1,9 +1,10 @@
 from repro.serve.engine import ServeConfig, ServingEngine
-from repro.serve.expert_cache import ExpertCache, ExpertUsage, PagedMoE
+from repro.serve.expert_cache import (ExpertCache, ExpertUsage, PagedMoE,
+                                      ShardedExpertCache)
 from repro.serve.scheduler import LMBackend, Request, Scheduler
 
 __all__ = [
     "ServeConfig", "ServingEngine",
-    "ExpertCache", "ExpertUsage", "PagedMoE",
+    "ExpertCache", "ExpertUsage", "PagedMoE", "ShardedExpertCache",
     "LMBackend", "Request", "Scheduler",
 ]

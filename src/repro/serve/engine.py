@@ -28,12 +28,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.dist.sharding import ShardingRules
+from repro.dist.sharding import ShardingRules, _trim_spec, param_sharding_rules
 from repro.models import model as M
 from repro.ops.policy import ComputePolicy
 from repro.train.step import make_serve_step
 
-__all__ = ["ServeConfig", "ServingEngine", "is_recurrent", "feedback_inputs"]
+__all__ = ["ServeConfig", "ServingEngine", "is_recurrent", "feedback_inputs",
+           "state_batch_axes", "shard_state", "shard_batch", "place_params"]
 
 
 def is_recurrent(cfg: ArchConfig) -> bool:
@@ -43,13 +44,19 @@ def is_recurrent(cfg: ArchConfig) -> bool:
 
 
 @functools.lru_cache(maxsize=None)
-def _stub_embed_table(vocab: int, d: int, dtype: str):
-    return (jax.random.normal(
-        jax.random.PRNGKey(0xE0BED), (max(vocab, 2), d)) * 0.02
-    ).astype(dtype)
+def _stub_embed_table(vocab: int, d: int, dtype: str) -> np.ndarray:
+    # HOST-side (numpy) cache: an lru_cache over device-placed arrays keyed
+    # only by (vocab, d, dtype) pins the value to whatever device/sharding
+    # was live at first call — stale and mis-sharded once a mesh is active.
+    # Placement happens per call site instead (jnp constant under jit picks
+    # up the active mesh; eager callers pay one tiny h2d copy).
+    return np.asarray(
+        (jax.random.normal(
+            jax.random.PRNGKey(0xE0BED), (max(vocab, 2), d)) * 0.02
+         ).astype(dtype))
 
 
-def feedback_inputs(cfg: ArchConfig, tok: jax.Array):
+def feedback_inputs(cfg: ArchConfig, tok: jax.Array, table=None):
     """Next-step model input from sampled (B,) token ids.
 
     Token-input archs feed the id; modality-frontend stubs ([audio]/[vlm],
@@ -57,11 +64,85 @@ def feedback_inputs(cfg: ArchConfig, tok: jax.Array):
     the id — standing in for the real frontend's codebook/patch embedder,
     per the assignment's stub contract.  Shared by the static engine and
     the continuous-batching scheduler.
+
+    Traced callers (the scheduler's jitted decode) embed the host table as
+    a compile-time constant, so placement follows the active mesh for
+    free.  Eager callers in a decode loop should pass ``table`` — a
+    device copy they cache for the engine's lifetime — or they pay a
+    host-to-device upload of the full (vocab, d) table per step.
     """
     if cfg.embed_input == "tokens":
         return tok[:, None]
-    table = _stub_embed_table(cfg.vocab_size, cfg.d_model, cfg.dtype)
+    if table is None:
+        table = jnp.asarray(
+            _stub_embed_table(cfg.vocab_size, cfg.d_model, cfg.dtype))
     return jnp.take(table, tok, axis=0)[:, None]
+
+
+def place_params(params, rules: Optional[ShardingRules]):
+    """Weights take their table layout (TP over "model", optional FSDP
+    over "data") so jitted serve steps start from the production placement
+    instead of whatever device the caller initialized on.  No-op without
+    rules."""
+    if rules is None or rules.mesh is None:
+        return params
+    return jax.device_put(params, param_sharding_rules(params, rules))
+
+
+# ------------------------------------------------------- state sharding
+
+
+def state_batch_axes(cfg: ArchConfig, max_len: int) -> list[int]:
+    """Per-leaf batch-axis indices of the decode state, discovered
+    structurally: build the state shape at two batch sizes — the axis whose
+    dim changed is the batch axis (stacked scanned layers prepend a period
+    axis, so the batch axis is NOT uniformly axis 0)."""
+    s1 = jax.eval_shape(lambda: M.init_state(cfg, 1, max_len))
+    s2 = jax.eval_shape(lambda: M.init_state(cfg, 2, max_len))
+
+    def axis(a, b):
+        diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
+                 if x != y]
+        if len(diffs) != 1:
+            raise ValueError(f"ambiguous batch axis: {a.shape}")
+        return diffs[0]
+
+    return jax.tree.leaves(jax.tree.map(axis, s1, s2))
+
+
+def shard_state(state, rules: Optional[ShardingRules], axes: list[int]):
+    """Place a decode state (KV caches / recurrent cells) with each leaf's
+    batch axis over the mesh's batch ("data"/"pod") axes — the serve-side
+    analogue of ``dist.sharding.batch_sharding``, which assumes a LEADING
+    batch dim and so cannot handle the stacked scanned-layer leaves.
+    No-op without rules (single-device serving)."""
+    if rules is None or rules.mesh is None:
+        return state
+    from jax.sharding import NamedSharding
+
+    entry = rules.batch_entry
+    leaves, treedef = jax.tree_util.tree_flatten(state)
+    out = []
+    for leaf, ax in zip(leaves, axes):
+        spec = [None] * leaf.ndim
+        if entry is not None and leaf.ndim:
+            spec[ax] = entry
+        trimmed = _trim_spec(leaf.shape, spec, rules.mesh)
+        out.append(jax.device_put(leaf,
+                                  NamedSharding(rules.mesh, trimmed)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shard_batch(x, rules: Optional[ShardingRules]):
+    """Place a batch-leading array (prompts, token feedback) over the
+    mesh's batch axes.  No-op without rules."""
+    if rules is None or rules.mesh is None:
+        return x
+    from jax.sharding import NamedSharding
+
+    spec = [rules.batch_entry] + [None] * (x.ndim - 1)
+    return jax.device_put(
+        x, NamedSharding(rules.mesh, _trim_spec(x.shape, spec, rules.mesh)))
 
 
 @dataclass(frozen=True)
@@ -101,9 +182,11 @@ class ServingEngine:
     def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig,
                  rules: Optional[ShardingRules] = None):
         self.cfg = cfg = _policy_override(cfg, scfg)
-        self.params = params
         self.scfg = scfg
         self.rules = rules
+        self.params = place_params(params, rules)
+        self._axes: Optional[list[int]] = None   # state batch axes (lazy)
+        self._fb_table = None                    # device feedback table
         self._steps: dict[int, tuple] = {}   # task_id -> (prefill, decode)
         self._chunk_steps: dict[int, tuple] = {}  # task_id -> (mid, last)
 
@@ -156,7 +239,12 @@ class ServingEngine:
             key, logits / self.scfg.temperature, axis=-1).astype(jnp.int32)
 
     def _feedback(self, tok):
-        return feedback_inputs(self.cfg, tok)
+        # eager decode loop: cache the device copy of the stub embed table
+        # for the engine's lifetime (one upload, not one per token)
+        if self.cfg.embed_input != "tokens" and self._fb_table is None:
+            self._fb_table = jnp.asarray(_stub_embed_table(
+                self.cfg.vocab_size, self.cfg.d_model, self.cfg.dtype))
+        return feedback_inputs(self.cfg, tok, table=self._fb_table)
 
     def generate(self, prompts: jax.Array, max_new_tokens: int,
                  task_id: int = 0):
@@ -168,6 +256,14 @@ class ServingEngine:
         s0 = prompts.shape[1]
         prefill, decode = self._get_steps(task_id)
         state = M.init_state(cfg, b, scfg.max_len)
+        if self.rules is not None and self.rules.mesh is not None:
+            # serve state (KV caches / recurrent cells) and the prompt
+            # batch live batch-sharded over the data axes for the whole
+            # prefill→decode loop
+            if self._axes is None:
+                self._axes = state_batch_axes(cfg, scfg.max_len)
+            state = shard_state(state, self.rules, self._axes)
+            prompts = shard_batch(jnp.asarray(prompts), self.rules)
 
         chunk = scfg.prefill_chunk
         windowed = any("attn_local" in k for k in cfg.block_pattern)

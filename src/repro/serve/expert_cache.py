@@ -20,16 +20,28 @@ pieces:
     (disjoint across waves) and the final gate-weighted combine sums the
     rows in exactly the same order as ``core.moe.apply_moe`` — the paged
     forward is **bit-exact** with the all-resident forward (tested).
+  * ``ShardedExpertCache`` — the expert-parallel form: experts are
+    partitioned over a mesh axis (``model``), each shard owns a bounded
+    slot bank for ITS experts only, and the device store is one stacked
+    ``(shards, R, ...)`` array sharded over that axis.  A fixed per-device
+    slot budget therefore scales total resident experts linearly with the
+    shard count — the distributed inversion of the paper's "load each
+    expert once": experts stay put and the ``(E, C, d)`` dispatch buffers
+    move through the all-to-all that GSPMD derives from the one-hot
+    dispatch einsums.  ``PagedMoE(mesh=...)`` switches to this path; it
+    stays bit-exact with the single-device forward (tested at mesh 2/4).
 """
 
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import routing as R
 from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
@@ -37,7 +49,7 @@ from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
 from repro.core.unified_linear import unified_linear
 from repro.quant import QTensor, is_qtensor
 
-__all__ = ["ExpertUsage", "ExpertCache", "PagedMoE"]
+__all__ = ["ExpertUsage", "ExpertCache", "ShardedExpertCache", "PagedMoE"]
 
 
 def _per_expert_bytes(host: dict) -> int:
@@ -94,7 +106,8 @@ class ExpertCache:
     """
 
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
-                 usage: Optional[ExpertUsage] = None):
+                 usage: Optional[ExpertUsage] = None,
+                 write_cb: Optional[Callable[[int, dict], None]] = None):
         if not host:
             raise ValueError("empty expert weight store")
         self.names = tuple(host)
@@ -105,21 +118,31 @@ class ExpertCache:
         self.max_resident = max(1, min(int(max_resident), self.num_experts))
         self.host = {n: np.asarray(w) for n, w in host.items()}
         self.usage = usage
-        # device slot store: one stacked (R, ...) tensor per weight name
-        self.slots = {
-            n: jnp.zeros((self.max_resident,) + w.shape[1:], w.dtype)
-            for n, w in self.host.items()
-        }
+        self._write_cb = write_cb
+        if write_cb is None:
+            # device slot store: one stacked (R, ...) tensor per weight name
+            self.slots = {
+                n: jnp.zeros((self.max_resident,) + w.shape[1:], w.dtype)
+                for n, w in self.host.items()
+            }
+            self._write = jax.jit(
+                lambda slots, new, r: {
+                    n: slots[n].at[r].set(new[n]) for n in slots},
+                donate_argnums=(0,))
+        else:
+            # bookkeeping-only mode: the slot store lives elsewhere (one
+            # shard bank of a ShardedExpertCache); page-ins go through the
+            # callback, which writes host rows into the external store
+            self.slots = None
+            self._write = None
         self._slot_expert = [-1] * self.max_resident     # slot -> expert id
         self._lru: OrderedDict[int, int] = OrderedDict()  # expert -> slot
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.bytes_paged = 0
-        self._write = jax.jit(
-            lambda slots, new, r: {
-                n: slots[n].at[r].set(new[n]) for n in slots},
-            donate_argnums=(0,))
+        self.prefetch_truncated = 0       # ids dropped by over-long prefetch
+        self.prefetch_dropped: list[int] = []   # most recent dropped ids
         self._expert_bytes = _per_expert_bytes(self.host)
 
     # -------------------------------------------------------------- state
@@ -133,6 +156,11 @@ class ExpertCache:
         tot = self.hits + self.misses
         return self.hits / tot if tot else 1.0
 
+    def reset_stats(self) -> None:
+        self.hits = self.misses = self.evictions = self.bytes_paged = 0
+        self.prefetch_truncated = 0
+        self.prefetch_dropped = []
+
     def stats(self) -> dict[str, Any]:
         return {
             "hits": self.hits, "misses": self.misses,
@@ -140,6 +168,8 @@ class ExpertCache:
             "hit_rate": self.hit_rate,
             "max_resident": self.max_resident,
             "resident_fraction": self.max_resident / self.num_experts,
+            "prefetch_truncated": self.prefetch_truncated,
+            "prefetch_dropped": list(self.prefetch_dropped),
         }
 
     # ------------------------------------------------------------- paging
@@ -153,8 +183,12 @@ class ExpertCache:
             slot = self._lru.pop(victim)
             self._slot_expert[slot] = -1
             self.evictions += 1
-        new = {n: jax.device_put(self.host[n][expert]) for n in self.names}
-        self.slots = self._write(self.slots, new, slot)
+        new = {n: self.host[n][expert] for n in self.names}
+        if self._write_cb is not None:
+            self._write_cb(slot, new)
+        else:
+            dev = {n: jax.device_put(v) for n, v in new.items()}
+            self.slots = self._write(self.slots, dev, slot)
         self._slot_expert[slot] = expert
         self._lru[expert] = slot
         self.bytes_paged += self._expert_bytes
@@ -179,17 +213,175 @@ class ExpertCache:
 
     def prefetch(self, expert_ids) -> None:
         """Warm residency (e.g. from ``ExpertUsage.hot``) without demand
-        accounting — prefetched experts later hit in ``ensure``."""
-        self.ensure(list(expert_ids)[: self.max_resident], record=False)
+        accounting — prefetched experts later hit in ``ensure``.
+
+        A warm-up list longer than the slot count is truncated to the first
+        ``max_resident`` (unique) ids; the tail is NOT silently dropped —
+        the dropped count and ids are recorded in the cache stats
+        (``prefetch_truncated`` / ``prefetch_dropped``)."""
+        ids = list(dict.fromkeys(int(e) for e in expert_ids))
+        keep, dropped = ids[: self.max_resident], ids[self.max_resident:]
+        if dropped:
+            self.prefetch_truncated += len(dropped)
+            self.prefetch_dropped = dropped
+        self.ensure(keep, record=False)
 
     def remap(self) -> np.ndarray:
-        """(E,) int32: expert id -> device slot (0 for non-resident; callers
-        only dereference resident ids — invalid routing slots are masked)."""
-        m = np.zeros((self.num_experts,), np.int32)
+        """(E,) int32: expert id -> device slot, ``-1`` for non-resident.
+
+        The sentinel is deliberate: a non-resident id must never silently
+        alias whatever expert happens to occupy slot 0.  Every dereference
+        site masks (``PagedMoE`` wave fns select slot indices only where
+        the wave mask holds) and the host-side wave loop asserts that all
+        wave ids map to real slots before launching the compute."""
+        m = np.full((self.num_experts,), -1, np.int32)
         for s, e in enumerate(self._slot_expert):
             if e >= 0:
                 m[e] = s
         return m
+
+
+class ShardedExpertCache:
+    """Expert-parallel residency: experts partitioned over a mesh axis.
+
+    Shard ``s`` of ``m`` owns experts ``[s*E/m, (s+1)*E/m)`` and a bounded
+    bank of ``max_resident`` device slots for them.  The device store is
+    ONE stacked ``(m, R, ...)`` array per weight name, sharded over
+    ``axis`` — shard s's bank physically lives on shard s, and a page-in
+    writes only that shard's partition.  Bookkeeping (LRU, hit/miss/bytes,
+    prefetch-truncation accounting) is one :class:`ExpertCache` per shard
+    in external-write mode, so the single-device semantics — including the
+    ``-1`` non-resident sentinel — carry over per shard.
+
+    A fixed per-device slot budget therefore holds ``m × R`` resident
+    experts in aggregate: residency scales linearly with the shard count.
+    """
+
+    def __init__(self, host: dict[str, np.ndarray], max_resident: int,
+                 mesh, axis: str = "model",
+                 usage: Optional[ExpertUsage] = None):
+        if not host:
+            raise ValueError("empty expert weight store")
+        self.mesh = mesh
+        self.axis = axis
+        m = int(mesh.shape[axis])
+        self.num_shards = m
+        self.num_experts = next(iter(host.values())).shape[0]
+        if self.num_experts % m:
+            raise ValueError(
+                f"E={self.num_experts} does not divide the {m}-way "
+                f"{axis!r} axis")
+        self.e_local = self.num_experts // m
+        self.max_resident = max(1, min(int(max_resident), self.e_local))
+        rs = self.max_resident
+        self.names = tuple(host)
+        self.usage = usage
+        # stacked sharded slot store: (m, R, ...) over the expert axis
+        self.slots = {
+            n: jax.device_put(
+                jnp.zeros((m, rs) + w.shape[1:], w.dtype),
+                NamedSharding(mesh, P(axis, *([None] * w.ndim))))
+            for n, w in host.items()
+        }
+        out_sh = {n: a.sharding for n, a in self.slots.items()}
+        self._write = jax.jit(
+            lambda slots, new, s, r: {
+                n: slots[n].at[s, r].set(new[n]) for n in slots},
+            donate_argnums=(0,), out_shardings=out_sh)
+
+        def _book(s: int) -> ExpertCache:
+            lo = s * self.e_local
+            local = {n: np.asarray(w)[lo:lo + self.e_local]
+                     for n, w in host.items()}
+
+            def write_cb(slot, new, _s=s):
+                dev = {n: jax.device_put(v) for n, v in new.items()}
+                self.slots = self._write(self.slots, dev,
+                                         jnp.int32(_s), jnp.int32(slot))
+
+            return ExpertCache(local, rs, write_cb=write_cb)
+
+        self.books = [_book(s) for s in range(m)]
+        self._expert_bytes = self.books[0]._expert_bytes
+
+    # -------------------------------------------------------------- state
+
+    @property
+    def total_slots(self) -> int:
+        return self.num_shards * self.max_resident
+
+    def owner(self, expert: int) -> int:
+        return int(expert) // self.e_local
+
+    @property
+    def resident(self) -> list[int]:
+        out = []
+        for s, book in enumerate(self.books):
+            out.extend(s * self.e_local + e for e in book.resident)
+        return out
+
+    def _sum(self, attr: str) -> int:
+        return sum(getattr(b, attr) for b in self.books)
+
+    hits = property(lambda self: self._sum("hits"))
+    misses = property(lambda self: self._sum("misses"))
+    evictions = property(lambda self: self._sum("evictions"))
+    bytes_paged = property(lambda self: self._sum("bytes_paged"))
+    prefetch_truncated = property(
+        lambda self: self._sum("prefetch_truncated"))
+
+    @property
+    def hit_rate(self) -> float:
+        tot = self.hits + self.misses
+        return self.hits / tot if tot else 1.0
+
+    def reset_stats(self) -> None:
+        for b in self.books:
+            b.reset_stats()
+
+    def stats(self) -> dict[str, Any]:
+        return {
+            "hits": self.hits, "misses": self.misses,
+            "evictions": self.evictions, "bytes_paged": self.bytes_paged,
+            "hit_rate": self.hit_rate,
+            "max_resident": self.max_resident,       # per shard
+            "num_shards": self.num_shards,
+            "total_slots": self.total_slots,
+            "resident_fraction": self.total_slots / self.num_experts,
+            "prefetch_truncated": self.prefetch_truncated,
+        }
+
+    # ------------------------------------------------------------- paging
+
+    def _by_shard(self, expert_ids) -> dict[int, list[int]]:
+        by: dict[int, list[int]] = {}
+        for e in expert_ids:
+            by.setdefault(self.owner(e), []).append(
+                int(e) % self.e_local)
+        return by
+
+    def ensure(self, expert_ids, record: bool = True) -> None:
+        """Make every (global) id resident on its owning shard."""
+        for s, local in self._by_shard(expert_ids).items():
+            self.books[s].ensure(local, record=record)
+
+    def prefetch(self, expert_ids) -> None:
+        """Warm each shard's bank with its share of ``expert_ids`` (global
+        ids, hottest first); per-shard truncation is recorded."""
+        for s, local in self._by_shard(expert_ids).items():
+            self.books[s].prefetch(local)
+
+    def remap(self) -> np.ndarray:
+        """(E,) int32: expert id -> GLOBAL slot index ``shard*R + slot``
+        into the flattened ``(m*R, ...)`` view of the stacked store; ``-1``
+        for non-resident (same sentinel contract as ``ExpertCache``)."""
+        out = np.full((self.num_experts,), -1, np.int32)
+        for s, book in enumerate(self.books):
+            local = book.remap()
+            mask = local >= 0
+            out[s * self.e_local + np.nonzero(mask)[0]] = \
+                s * self.max_resident + local[mask]
+        return out
 
 
 class PagedMoE:
@@ -209,10 +401,21 @@ class PagedMoE:
                  resident_fraction: float = 0.5,
                  usage: Optional[ExpertUsage] = None,
                  usage_decay: float = 0.9,
-                 budget_bytes: Optional[int] = None):
+                 budget_bytes: Optional[int] = None,
+                 mesh=None, ep_axis: str = "model"):
         if cfg.impl not in ("grouped", "onehot"):
-            raise ValueError("PagedMoE serves the single-device paths")
+            raise ValueError(
+                "PagedMoE pages the grouped/onehot expert paths (ep_local "
+                "keeps all experts resident — nothing to page)")
         self.cfg = cfg
+        # expert-parallel mode: a mesh whose ep_axis has >1 shards switches
+        # the cache to per-shard banks and the waves to the one-hot GSPMD
+        # dispatch (all-to-all moves tokens; experts stay put)
+        self.mesh = None
+        self.ep_axis = ep_axis
+        if mesh is not None and ep_axis in mesh.axis_names \
+                and int(mesh.shape[ep_axis]) > 1:
+            self.mesh = mesh
         names = expert_param_names(cfg)
         # quantized expert weights page as their packed leaves (<name>.q /
         # <name>.scale): the cache store stays plain arrays, and the wave
@@ -232,18 +435,30 @@ class PagedMoE:
             else:
                 host[n] = np.asarray(wn)
         per_expert = _per_expert_bytes(host)
+        shards = int(self.mesh.shape[ep_axis]) if self.mesh is not None else 1
+        e_per_shard = cfg.num_experts // shards
         if budget_bytes is not None:
-            # device budget in bytes -> resident slots (≥ top_k so one
-            # wave can always serve a token's full expert set)
-            max_resident = max(cfg.top_k,
+            # device budget in bytes -> resident slots PER DEVICE (≥ top_k
+            # on a single device so one wave can always serve a token's
+            # full expert set; per-shard banks only need ≥ 1 — waves
+            # accumulate into disjoint rows, so splitting never hurts)
+            floor = cfg.top_k if shards == 1 else 1
+            max_resident = max(floor,
                                int(budget_bytes) // max(per_expert, 1))
         else:
-            max_resident = max(cfg.top_k,
+            # resident_fraction is a per-shard fraction of the shard's
+            # owned experts — the same fraction at any mesh size
+            floor = cfg.top_k if shards == 1 else 1
+            max_resident = max(floor,
                                int(np.ceil(resident_fraction
-                                           * cfg.num_experts)))
+                                           * e_per_shard)))
         self.usage = usage or ExpertUsage(cfg.num_experts, cfg.num_tasks,
                                           decay=usage_decay)
-        self.cache = ExpertCache(host, max_resident, usage=self.usage)
+        if self.mesh is not None:
+            self.cache = ShardedExpertCache(host, max_resident, self.mesh,
+                                            axis=ep_axis, usage=self.usage)
+        else:
+            self.cache = ExpertCache(host, max_resident, usage=self.usage)
         self.gate = jnp.asarray(params["gate"])
         gb = params.get("gate_bias")   # optional (tasks, E) logit bias
         self.gate_bias = None if gb is None else jnp.asarray(gb)
@@ -271,7 +486,12 @@ class PagedMoE:
 
     def _build(self, g: int, capacity: int):
         cfg = self.cfg
-        e, k, rs = cfg.num_experts, cfg.top_k, self.cache.max_resident
+        e, k = cfg.num_experts, cfg.top_k
+        sharded = self.mesh is not None
+        # flattened slot-bank size the wave fns index into: per-shard banks
+        # concatenate to (m*R) global slots in the sharded mode
+        rs = (self.cache.total_slots if sharded
+              else self.cache.max_resident)
 
         has_bias = self.gate_bias is not None
 
@@ -291,16 +511,38 @@ class PagedMoE:
                 return r, counts
             return jax.vmap(per_group)(groups, real)
 
+        mesh, axis = self.mesh, self.ep_axis
+
         def wave(groups, routing, slots, wave_mask, remap, rows_acc):
+            if sharded:
+                # (m, R, ...) shard banks -> flat (m*R, ...) global slots;
+                # the reshape keeps the expert dim shard-contiguous so the
+                # store stays partitioned over the expert-parallel axis
+                slots = {n: a.reshape((rs,) + a.shape[2:])
+                         for n, a in slots.items()}
+            params_w = self._slot_params(slots)
+
             def per_group(xg, r, rows):
                 in_wave = wave_mask[r.expert]          # (T, k) bool
+                # remap carries -1 for non-resident experts; dereference
+                # ONLY where the wave mask holds (a forgotten mask must
+                # never alias slot 0's expert — see ExpertCache.remap)
+                slot_idx = jnp.where(in_wave, remap[r.expert], 0)
                 r_w = R.Routing(
-                    expert=remap[r.expert], gate=r.gate,
+                    expert=slot_idx.astype(jnp.int32), gate=r.gate,
                     position=r.position, valid=r.valid & in_wave,
                     probs=r.probs)
-                buf = R.dispatch(xg, r_w, rs, capacity)
+                if sharded:
+                    # one-hot dispatch: under GSPMD the (rs, C, d) buffer
+                    # sharded over the expert axis turns these einsums
+                    # into the token all-to-all of expert parallelism
+                    buf = R.dispatch_onehot(xg, r_w, rs, capacity)
+                    buf = jax.lax.with_sharding_constraint(
+                        buf, NamedSharding(mesh, P(axis, None, None)))
+                else:
+                    buf = R.dispatch(xg, r_w, rs, capacity)
                 sizes = R.dispatch_counts(r_w, rs)
-                out = _expert_ffn(self._slot_params(slots), cfg, buf, sizes)
+                out = _expert_ffn(params_w, cfg, buf, sizes)
                 ef = r_w.expert.reshape(-1)
                 pf = jnp.minimum(r_w.position.reshape(-1), capacity - 1)
                 got = out[ef, pf]                      # (T*k, d)
@@ -359,17 +601,20 @@ class PagedMoE:
         res = set(self.cache.resident)
         needed.sort(key=lambda i: (i not in res, i))
 
-        rs = self.cache.max_resident
         n = groups.shape[0]
         rows = jnp.zeros((n, g * cfg.top_k, d), groups.dtype)
-        for w0 in range(0, len(needed), rs):
-            wave_ids = needed[w0:w0 + rs]
+        for wave_ids in self._plan_waves(needed):
             self.cache.ensure(wave_ids)
+            remap = self.cache.remap()
+            # masking contract: every id this wave dereferences must be
+            # resident (remap returns -1 sentinels for everything else)
+            assert (remap[wave_ids] >= 0).all(), \
+                f"wave ids {wave_ids} not all resident: {remap[wave_ids]}"
             mask = np.zeros((cfg.num_experts,), bool)
             mask[wave_ids] = True
             rows = self._wave_fn(groups, routing, self.cache.slots,
                                  jnp.asarray(mask),
-                                 jnp.asarray(self.cache.remap()), rows)
+                                 jnp.asarray(remap), rows)
         y, aux = self._finish_fn(routing, rows, real)
         y = y.reshape(-1, d)[:t_total].reshape(orig_shape).astype(x.dtype)
 
@@ -381,7 +626,29 @@ class PagedMoE:
                                    self.shared["shared_wd"])
         return y, aux.mean()
 
+    def _plan_waves(self, needed: list[int]) -> list[list[int]]:
+        """Chunk the needed experts into residency-bounded waves.
+
+        Single device: consecutive chunks of ``max_resident``.  Expert-
+        parallel: every shard contributes up to its bank size per wave, so
+        wave ``w`` holds the w-th chunk of EACH shard's needed-list — all
+        shards compute concurrently and the wave count is the max per-shard
+        chunk count, not the global one (the linear-scaling win)."""
+        rs = self.cache.max_resident
+        if self.mesh is None:
+            return [needed[i:i + rs] for i in range(0, len(needed), rs)]
+        by: dict[int, list[int]] = {}
+        for e in needed:   # per-shard lists keep the resident-first order
+            by.setdefault(self.cache.owner(e), []).append(e)
+        n_waves = max((-(-len(v) // rs) for v in by.values()), default=0)
+        return [sum((v[w * rs:(w + 1) * rs] for v in by.values()), [])
+                for w in range(n_waves)]
+
     def prefetch(self, task_id: Optional[int] = None) -> None:
         """Warm the device slots with the usage-EMA-hot experts for a task —
-        called by the scheduler ahead of a task-bucket switch."""
-        self.cache.prefetch(self.usage.hot(self.cache.max_resident, task_id))
+        called by the scheduler ahead of a task-bucket switch.  In the
+        expert-parallel mode every shard warms its own bank with its share
+        of the hot set (aggregate residency = shards × bank size)."""
+        budget = (self.cache.total_slots if self.mesh is not None
+                  else self.cache.max_resident)
+        self.cache.prefetch(self.usage.hot(budget, task_id))

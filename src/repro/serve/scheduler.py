@@ -45,7 +45,8 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.dist.sharding import ShardingRules, use_rules
 from repro.models import model as M
-from repro.serve.engine import ServeConfig, feedback_inputs, is_recurrent
+from repro.serve.engine import (ServeConfig, feedback_inputs, is_recurrent,
+                                shard_state, state_batch_axes)
 from repro.serve.expert_cache import ExpertUsage
 
 __all__ = ["Request", "Scheduler", "LMBackend"]
@@ -90,17 +91,7 @@ class _StateSlots:
     """
 
     def __init__(self, cfg: ArchConfig, max_len: int):
-        s1 = jax.eval_shape(lambda: M.init_state(cfg, 1, max_len))
-        s2 = jax.eval_shape(lambda: M.init_state(cfg, 2, max_len))
-
-        def axis(a, b):
-            diffs = [i for i, (x, y) in enumerate(zip(a.shape, b.shape))
-                     if x != y]
-            if len(diffs) != 1:
-                raise ValueError(f"ambiguous batch axis: {a.shape}")
-            return diffs[0]
-
-        self._axes = jax.tree.leaves(jax.tree.map(axis, s1, s2))
+        self._axes = state_batch_axes(cfg, max_len)
 
 
 class LMBackend:
@@ -118,10 +109,10 @@ class LMBackend:
         if scfg.temperature > 0.0:
             raise ValueError("the scheduler decodes greedily (argmax is "
                              "fused into the jitted step)")
-        from repro.serve.engine import _policy_override
+        from repro.serve.engine import _policy_override, place_params
 
         self.cfg = cfg = _policy_override(cfg, scfg)
-        self.params = params
+        self.params = place_params(params, rules)
         self.scfg = scfg
         self.rules = rules
         self.recurrent = is_recurrent(cfg)
@@ -204,7 +195,11 @@ class LMTaskBucket:
         self.backend = backend
         self.task_id = task_id
         self.slots = slots
-        self.state = M.init_state(backend.cfg, slots, backend.scfg.max_len)
+        # decode lanes live batch-sharded over the data axes when a mesh is
+        # active — admit splices and decode steps keep that placement
+        self.state = shard_state(
+            M.init_state(backend.cfg, slots, backend.scfg.max_len),
+            backend.rules, backend._slots_io._axes)
         self.cache_pos = np.zeros((slots,), np.int32)
         self.last_tok = np.zeros((slots,), np.int32)
         self.task_slots = np.zeros((slots,), np.int32)

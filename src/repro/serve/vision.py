@@ -24,6 +24,7 @@ import numpy as np
 
 from repro.configs import m3vit as MV
 from repro.configs.base import ArchConfig
+from repro.dist.sharding import ShardingRules, use_rules
 from repro.models import layers as L
 from repro.models import transformer as T
 from repro.models import vit as V
@@ -40,14 +41,31 @@ class M3ViTServer:
     ``resident_fraction`` bounds each MoE layer's device-resident experts;
     1.0 keeps everything resident (still exercising the paged code path,
     which is bit-exact with ``core.moe.apply_moe`` — see tests).
+
+    ``rules`` (mesh serving): dense blocks run under the sharding rules
+    (batch over ``data``, heads/ff over ``model``) and every MoE layer's
+    ``PagedMoE`` switches to expert-parallel paging over the ``model``
+    axis — per-shard slot banks, so the same per-device budget holds
+    ``shards ×`` more resident experts.
+
+    ``ep_mesh`` is the hybrid placement from the accelerator co-design
+    line of work (M³ViT / UbiMoE): the dense trunk — tiny next to the
+    expert weights — stays replicated/local, and ONLY the MoE layers go
+    expert-parallel over the mesh.  Pass it without ``rules`` to get
+    expert parallelism with zero collectives in the dense blocks.
     """
 
     def __init__(self, cfg: ArchConfig, params,
                  resident_fraction: float = 0.5,
-                 expert_budget_bytes: Optional[int] = None):
+                 expert_budget_bytes: Optional[int] = None,
+                 rules: Optional[ShardingRules] = None,
+                 ep_mesh=None):
         if cfg.family != "vit-moe":
             raise ValueError("M3ViTServer serves the vit-moe family")
         self.cfg = cfg
+        self.rules = rules
+        mesh = ep_mesh if ep_mesh is not None else (
+            rules.mesh if rules is not None else None)
         self.params = params
         self.mcfg = T.moe_config(cfg)
         period = cfg.period
@@ -69,7 +87,8 @@ class M3ViTServer:
         self.paged = {
             i: PagedMoE(self.layer_params[i]["moe"], self.mcfg,
                         resident_fraction=resident_fraction,
-                        budget_bytes=expert_budget_bytes)
+                        budget_bytes=expert_budget_bytes,
+                        mesh=mesh)
             for i, kind in enumerate(self.kinds) if kind == "attn_moe"
         }
 
@@ -114,20 +133,25 @@ class M3ViTServer:
         """images: (B, H, W, 3) f32 or (B, T, d) patch embeddings.
         ``task``: name or index.  Returns the dense prediction (numpy)."""
         task_id = MV.TASKS.index(task) if isinstance(task, str) else int(task)
-        x = self._embed(self.params, jnp.asarray(images))
-        b, s = x.shape[0], x.shape[1]
-        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
-        for i, kind in enumerate(self.kinds):
-            bp = self.layer_params[i]
-            if kind == "attn_moe":
-                xr, h = self._moe_pre(bp, x, pos)
-                with use_policy(self.cfg.policy):
-                    y, _ = self.paged[i](h, task_id=task_id)
-                x = xr + y
-            else:
-                x = self._dense(bp, x, pos)
-        feats = self._final(self.params, x)
-        return np.asarray(self._heads[MV.TASKS[task_id]](self.params, feats))
+        # rules scope covers the jit traces below, so the dense blocks'
+        # constrain() calls bind to the serving mesh
+        with use_rules(self.rules):
+            x = self._embed(self.params, jnp.asarray(images))
+            b, s = x.shape[0], x.shape[1]
+            pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                   (b, s))
+            for i, kind in enumerate(self.kinds):
+                bp = self.layer_params[i]
+                if kind == "attn_moe":
+                    xr, h = self._moe_pre(bp, x, pos)
+                    with use_policy(self.cfg.policy):
+                        y, _ = self.paged[i](h, task_id=task_id)
+                    x = xr + y
+                else:
+                    x = self._dense(bp, x, pos)
+            feats = self._final(self.params, x)
+            return np.asarray(
+                self._heads[MV.TASKS[task_id]](self.params, feats))
 
     def prefetch(self, task_id: int) -> None:
         """Warm every MoE layer's expert cache with the task's hot set —
@@ -202,10 +226,13 @@ class VisionBackend:
 
     def __init__(self, cfg: ArchConfig, params,
                  resident_fraction: float = 0.5,
-                 expert_budget_bytes: Optional[int] = None):
+                 expert_budget_bytes: Optional[int] = None,
+                 rules: Optional[ShardingRules] = None,
+                 ep_mesh=None):
         self.server = M3ViTServer(cfg, params,
                                   resident_fraction=resident_fraction,
-                                  expert_budget_bytes=expert_budget_bytes)
+                                  expert_budget_bytes=expert_budget_bytes,
+                                  rules=rules, ep_mesh=ep_mesh)
         self.num_tasks = len(MV.TASKS)
         self.usage = None   # per-layer usage lives inside each PagedMoE
 

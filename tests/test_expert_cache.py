@@ -111,6 +111,94 @@ class TestExpertCacheLRU:
         cache.ensure([0, 1, 2])
         assert cache.hits == 3 and cache.misses == 0
 
+    def test_remap_sentinel_for_nonresident(self):
+        """Non-resident experts map to -1, never to a live slot: mapping
+        them to 0 silently aliased whatever expert occupied slot 0 for any
+        caller that forgot to mask (the old behaviour)."""
+        cache = ExpertCache(self._host(e=6), max_resident=2)
+        cache.ensure([4, 1])
+        remap = cache.remap()
+        assert remap[4] >= 0 and remap[1] >= 0
+        for e in (0, 2, 3, 5):
+            assert remap[e] == -1, f"non-resident {e} must map to -1"
+        # an evicted expert goes back to the sentinel
+        cache.ensure([5, 1])           # 5 evicts the LRU (4)
+        remap = cache.remap()
+        assert remap[4] == -1 and remap[5] >= 0
+
+    def test_prefetch_truncation_recorded(self):
+        """A warm-up list longer than the slot count keeps the head and
+        RECORDS the dropped tail (count + ids) instead of silently
+        truncating."""
+        cache = ExpertCache(self._host(e=6), max_resident=3)
+        cache.prefetch([5, 0, 1, 2, 4])
+        assert sorted(cache.resident) == [0, 1, 5]
+        s = cache.stats()
+        assert s["prefetch_truncated"] == 2
+        assert s["prefetch_dropped"] == [2, 4]
+        cache.prefetch([0, 1])         # within budget: no new accounting
+        assert cache.stats()["prefetch_truncated"] == 2
+
+
+class TestEvictedExpertRegression:
+    def test_route_to_evicted_expert_stays_exact(self):
+        """Regression for the remap slot-0 alias: route a batch to experts
+        that were all EVICTED by the previous batch.  Before the -1
+        sentinel, ``remap()`` sent non-resident ids to slot 0, so any
+        unmasked dereference silently computed with whichever expert held
+        slot 0; the paged forward must stay bit-exact with ``apply_moe``
+        through the eviction."""
+        cfg = _cfg(top_k=2)
+        params, x = _setup(cfg, dtype=jnp.float32)
+        # disjoint per-task working sets so task 1 fully evicts task 0's
+        bias = np.full((2, cfg.num_experts), -30.0, np.float32)
+        bias[0, :4] = 0.0
+        bias[1, 4:] = 0.0
+        params = dict(params, gate_bias=jnp.asarray(bias))
+        paged = PagedMoE(params, cfg, resident_fraction=0.25)   # R = 2
+        paged(x, task_id=0)             # resident ⊂ {0..3}
+        paged(x, task_id=1)             # evicts them: resident ⊂ {4..7}
+        remap = paged.cache.remap()
+        assert all(remap[e] == -1 for e in range(4)), \
+            "task-0 experts must be non-resident (sentinel) after eviction"
+        ref, _ = moe_lib.apply_moe(params, cfg, x, task_id=0)
+        y, _ = paged(x, task_id=0)      # routes to the evicted experts
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(ref))
+
+
+class TestShardedCacheBookkeeping:
+    """ShardedExpertCache on a 1-shard mesh: same bookkeeping contract as
+    the single-device cache (the multi-shard paths run in the forced-
+    host-device subprocess suite, tests/test_serve_dist.py)."""
+
+    def _host(self, e=6):
+        rng = np.random.default_rng(0)
+        return {"w": rng.standard_normal((e, 4, 4)).astype(np.float32)}
+
+    def _mesh(self):
+        import jax as _jax
+        return _jax.make_mesh((1, 1), ("data", "model"))
+
+    def test_single_shard_matches_expert_cache(self):
+        from repro.serve.expert_cache import ShardedExpertCache
+
+        host = self._host()
+        cache = ShardedExpertCache(host, 3, self._mesh())
+        assert cache.num_shards == 1 and cache.total_slots == 3
+        cache.ensure([0, 1, 2])
+        assert cache.misses == 3 and cache.hits == 0
+        cache.ensure([1, 3])
+        assert cache.hits == 1 and cache.evictions == 1
+        remap = cache.remap()
+        assert remap[0] == -1 and remap[3] >= 0
+        slots = np.asarray(cache.slots["w"]).reshape(-1, 4, 4)
+        for e in (1, 2, 3):
+            np.testing.assert_array_equal(slots[remap[e]], host["w"][e])
+        cache.prefetch([0, 1, 2, 4, 5])
+        assert cache.stats()["prefetch_truncated"] == 2
+        cache.reset_stats()
+        assert cache.hits == 0 and cache.stats()["prefetch_truncated"] == 0
+
 
 class TestExpertUsage:
     def test_ema_and_hot(self):
