@@ -128,7 +128,7 @@ def _serve_scheduler_vision(cfg, args, rules=None) -> int:
                             resident_fraction=args.resident_fraction,
                             expert_budget_bytes=args.expert_budget_bytes
                             or None,
-                            rules=rules)
+                            rules=rules, async_paging=args.async_paging)
     sched = Scheduler(backend, total_slots=args.batch, quantum=1,
                       num_tasks=len(MV.TASKS))
     imgs = np.asarray(jax.random.normal(
@@ -144,6 +144,11 @@ def _serve_scheduler_vision(cfg, args, rules=None) -> int:
           f"p50 {m['latency_p50_s']*1e3:.0f}ms; expert cache: "
           f"hit_rate {cache.get('hit_rate', 1.0):.2f} at "
           f"resident_fraction {cache.get('resident_fraction', 1.0):.2f}")
+    if args.async_paging:
+        print(f"[serve] async paging: "
+              f"stall {cache.get('stall_s', 0.0)*1e3:.1f}ms, "
+              f"hidden {cache.get('hidden_s', 0.0)*1e3:.1f}ms, "
+              f"overlap_ratio {cache.get('overlap_ratio', 1.0):.2f}")
     return 0
 
 
@@ -171,6 +176,11 @@ def main() -> int:
                     help="scheduler mode: number of gating tasks")
     ap.add_argument("--resident-fraction", type=float, default=0.5,
                     help="vision scheduler: fraction of experts resident")
+    ap.add_argument("--async-paging", action="store_true",
+                    help="vision scheduler: page expert weights "
+                         "asynchronously (router-lookahead prefetch + "
+                         "double-buffered waves; bit-exact with sync "
+                         "paging, reports stall_s/overlap_ratio)")
     ap.add_argument("--mesh", default=None,
                     help="DxM mesh (data x model), e.g. 2x2: serve state "
                          "sharded over data, tensor/expert parallelism "
@@ -222,7 +232,7 @@ def main() -> int:
     scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
                        eos_id=args.eos_id, seed=args.seed,
                        prefill_chunk=args.prefill_chunk, policy=policy,
-                       kv_quant=kv_quant)
+                       kv_quant=kv_quant, async_paging=args.async_paging)
 
     if args.scheduler and cfg.family == "vit-moe":
         if policy is not None:

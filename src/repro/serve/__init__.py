@@ -2,9 +2,12 @@ from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.expert_cache import (ExpertCache, ExpertUsage, PagedMoE,
                                       ShardedExpertCache)
 from repro.serve.scheduler import LMBackend, Request, Scheduler
+from repro.serve.transfer import (FakeTransferEngine, TransferEngine,
+                                  TransferTimeout)
 
 __all__ = [
     "ServeConfig", "ServingEngine",
     "ExpertCache", "ExpertUsage", "PagedMoE", "ShardedExpertCache",
     "LMBackend", "Request", "Scheduler",
+    "FakeTransferEngine", "TransferEngine", "TransferTimeout",
 ]

@@ -163,6 +163,11 @@ class ServeConfig:
     # config's ``kv_quant``.  Pair with ``policy_named("xla_int8")`` so the
     # int8 decode impl is a dispatch hit, not a fallback.
     kv_quant: Optional[str] = None
+    # async expert paging (vision backend): page expert weights through a
+    # TransferEngine — copies submit ahead of use (router lookahead, wave
+    # k+1 behind wave k) and fence only at the point of use.  Bit-exact
+    # with synchronous paging; adds stall_s/overlap_ratio to cache stats.
+    async_paging: bool = False
 
 
 def _policy_override(cfg: ArchConfig, scfg: ServeConfig) -> ArchConfig:

@@ -34,7 +34,7 @@ pieces:
 
 from __future__ import annotations
 
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Any, Callable, Optional
 
 import jax
@@ -48,8 +48,13 @@ from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
                             group_shape)
 from repro.core.unified_linear import unified_linear
 from repro.quant import QTensor, is_qtensor
+from repro.serve.transfer import Transfer
 
 __all__ = ["ExpertUsage", "ExpertCache", "ShardedExpertCache", "PagedMoE"]
+
+# how many truncation-dropped prefetch ids each cache retains as evidence
+# (bounded so a long-running server cannot grow the list without limit)
+PREFETCH_DROPPED_KEEP = 64
 
 
 def _per_expert_bytes(host: dict) -> int:
@@ -103,13 +108,29 @@ class ExpertCache:
     (``expert_param_names`` order).  ``max_resident`` slots are allocated on
     device; ``ensure`` demand-pages, ``prefetch`` warms without touching the
     demand hit/miss counters.
+
+    With a ``transfer_engine`` (``serve/transfer.py``) the cache pages
+    asynchronously: ``prefetch_async`` *submits* non-blocking host→device
+    copies and returns immediately (the slot is reserved and the expert
+    tracked in-flight), ``ensure`` *fences* any in-flight member before
+    the caller dereferences it, and demand misses submit-then-fence so
+    even unpredicted paging flows through the same accounted stream.
+    Evicting an in-flight expert cancels its transfer — the slot's next
+    occupant can never be clobbered by a late completion (double-buffer
+    slot-reuse ordering; tested under adversarial completion schedules).
+    Without an engine every code path is the PR-2 synchronous one,
+    unchanged.
     """
 
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
                  usage: Optional[ExpertUsage] = None,
-                 write_cb: Optional[Callable[[int, dict], None]] = None):
+                 write_cb: Optional[Callable[[int, dict], None]] = None,
+                 transfer_engine=None, label: str = "cache"):
         if not host:
             raise ValueError("empty expert weight store")
+        # transfer keys are (label, expert) — stable and test-addressable
+        # (a FakeTransferEngine ``schedule`` can name them ahead of time)
+        self.label = label
         self.names = tuple(host)
         self.num_experts = next(iter(host.values())).shape[0]
         for n, w in host.items():
@@ -129,27 +150,70 @@ class ExpertCache:
                 lambda slots, new, r: {
                     n: slots[n].at[r].set(new[n]) for n in slots},
                 donate_argnums=(0,))
+            # batched variant: one donated store update for a whole fence
+            # wave.  While compute holds the slots buffers the runtime
+            # cannot donate in place and falls back to a copy — paying
+            # that once per wave instead of once per expert is what keeps
+            # the async stream cheaper than it hides.  The per-expert
+            # rows go in as separate args (no host-side stack): the sets
+            # fuse into one scatter-like update inside the jit
+
+            def _write_many(slots, idx, *rows):
+                for i, r in enumerate(rows):
+                    slots = {n: slots[n].at[idx[i]].set(r[n])
+                             for n in slots}
+                return slots
+
+            self._write_many = jax.jit(_write_many, donate_argnums=(0,))
+            # full-overwrite variant: a fence wave that replaces EVERY
+            # slot (the steady state when wave size == R) builds the new
+            # store straight from the payload rows — no read of, or
+            # donation dependency on, the old buffers, so the commit
+            # never has to wait for (or copy around) in-flight compute
+            # that still holds them
+            self._write_full = jax.jit(
+                lambda *rows: {
+                    n: jnp.stack([r[n] for r in rows])
+                    for n in self.names})
         else:
             # bookkeeping-only mode: the slot store lives elsewhere (one
             # shard bank of a ShardedExpertCache); page-ins go through the
             # callback, which writes host rows into the external store
             self.slots = None
             self._write = None
+            self._write_many = None
+            self._write_full = None
         self._slot_expert = [-1] * self.max_resident     # slot -> expert id
         self._lru: OrderedDict[int, int] = OrderedDict()  # expert -> slot
+        self.engine = transfer_engine
+        # expert -> (slot, Transfer): slot reserved, copy not yet committed
+        self._inflight: dict[int, tuple[int, Transfer]] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
         self.bytes_paged = 0
+        self.async_prefetches = 0     # transfers submitted by prefetch_async
+        self.inflight_joins = 0       # in-flight transfers fenced by ensure
+        self.async_cancelled = 0      # in-flight prefetches killed by evict
         self.prefetch_truncated = 0       # ids dropped by over-long prefetch
-        self.prefetch_dropped: list[int] = []   # most recent dropped ids
+        # dropped ids ACCUMULATE (bounded) — a multi-wave run must not lose
+        # earlier truncation evidence to the latest prefetch call
+        self.prefetch_dropped: deque[int] = deque(maxlen=PREFETCH_DROPPED_KEEP)
         self._expert_bytes = _per_expert_bytes(self.host)
 
     # -------------------------------------------------------------- state
 
     @property
     def resident(self) -> list[int]:
+        """Experts holding a slot — committed OR reserved by an in-flight
+        prefetch (wave planning treats an arriving expert as warm; its
+        copy is fenced before any dereference)."""
         return [e for e in self._slot_expert if e >= 0]
+
+    @property
+    def inflight(self) -> list[int]:
+        """Experts whose copy has been submitted but not yet fenced."""
+        return list(self._inflight)
 
     @property
     def hit_rate(self) -> float:
@@ -158,11 +222,13 @@ class ExpertCache:
 
     def reset_stats(self) -> None:
         self.hits = self.misses = self.evictions = self.bytes_paged = 0
+        self.async_prefetches = self.inflight_joins = 0
+        self.async_cancelled = 0
         self.prefetch_truncated = 0
-        self.prefetch_dropped = []
+        self.prefetch_dropped.clear()
 
     def stats(self) -> dict[str, Any]:
-        return {
+        out = {
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "bytes_paged": self.bytes_paged,
             "hit_rate": self.hit_rate,
@@ -171,35 +237,182 @@ class ExpertCache:
             "prefetch_truncated": self.prefetch_truncated,
             "prefetch_dropped": list(self.prefetch_dropped),
         }
+        if self.engine is not None:
+            out.update({
+                "async_prefetches": self.async_prefetches,
+                "inflight_joins": self.inflight_joins,
+                "async_cancelled": self.async_cancelled,
+                "inflight": len(self._inflight),
+                "stall_s": self.engine.stats.stall_s,
+                "overlap_ratio": self.engine.stats.overlap_ratio,
+            })
+        return out
 
     # ------------------------------------------------------------- paging
 
-    def _page_in(self, expert: int, pinned: set[int]) -> None:
+    def _reserve_slot(self, pinned: set[int]) -> int:
+        """Claim a slot for a new occupant: first free slot, else evict the
+        LRU expert not in ``pinned``.  Evicting an expert whose prefetch is
+        still in flight CANCELS the transfer — the copy never committed, so
+        the slot's next occupant cannot be clobbered by a late completion
+        (the double-buffer slot-reuse ordering contract)."""
         free = [s for s, e in enumerate(self._slot_expert) if e < 0]
         if free:
-            slot = free[0]
-        else:
-            victim = next(e for e in self._lru if e not in pinned)
-            slot = self._lru.pop(victim)
-            self._slot_expert[slot] = -1
-            self.evictions += 1
-        new = {n: self.host[n][expert] for n in self.names}
+            return free[0]
+        victim = next(e for e in self._lru if e not in pinned)
+        slot = self._lru.pop(victim)
+        self._slot_expert[slot] = -1
+        self.evictions += 1
+        vt = self._inflight.pop(victim, None)
+        if vt is not None:
+            self.engine.cancel(vt[1])
+            self.async_cancelled += 1
+        return slot
+
+    def _commit(self, expert: int, slot: int, arrays: dict) -> None:
+        """Land ``arrays`` (host or already-device leaves) in ``slot`` and
+        finish the residency bookkeeping."""
         if self._write_cb is not None:
-            self._write_cb(slot, new)
+            self._write_cb(slot, arrays)
         else:
-            dev = {n: jax.device_put(v) for n, v in new.items()}
+            dev = {n: jax.device_put(v) for n, v in arrays.items()}
             self.slots = self._write(self.slots, dev, slot)
         self._slot_expert[slot] = expert
         self._lru[expert] = slot
         self.bytes_paged += self._expert_bytes
 
-    def ensure(self, expert_ids, record: bool = True) -> None:
-        """Make every id in ``expert_ids`` device-resident (≤ max_resident)."""
+    def _host_rows(self, expert: int) -> dict[str, np.ndarray]:
+        return {n: self.host[n][expert] for n in self.names}
+
+    def _page_in(self, expert: int, pinned: set[int]) -> None:
+        """Synchronous demand page-in (also the misprediction fallback:
+        an expert nobody prefetched still pages correctly — through the
+        engine when one is attached, so its stall is accounted)."""
+        slot = self._reserve_slot(pinned)
+        new = self._host_rows(expert)
+        if self.engine is not None:
+            tr = self.engine.submit((self.label, expert), new)
+            new = self.engine.fence(tr)
+        self._commit(expert, slot, new)
+
+    def _submit_async(self, expert: int, pinned: set[int]) -> Transfer:
+        """Reserve a slot and start a non-blocking copy for ``expert``.
+        The slot is RESERVED (``_slot_expert``/``_lru`` claim it so LRU
+        ordering and wave planning see it coming) but the store is not
+        touched until the transfer is fenced and committed."""
+        slot = self._reserve_slot(pinned)
+        tr = self.engine.submit((self.label, expert),
+                                self._host_rows(expert))
+        self._inflight[expert] = (slot, tr)
+        self._slot_expert[slot] = expert
+        self._lru[expert] = slot
+        return tr
+
+    def _join(self, expert: int) -> None:
+        """Fence an in-flight transfer and commit it to its reserved slot.
+        May raise ``TransferTimeout`` (a hung transport is loud, never a
+        silent deadlock)."""
+        slot, tr = self._inflight.pop(expert)
+        payload = self.engine.fence(tr)
+        self._commit(expert, slot, payload)
+        self.inflight_joins += 1
+
+    def _commit_batch(self, batch: list[tuple[int, int, dict]]) -> None:
+        """Land a whole fence wave of ``(expert, slot, payload)`` in ONE
+        donated store update.  Slots in a batch are distinct (each
+        in-flight expert holds its own reservation), so the scatter is
+        bit-identical to committing them one by one — it just pays the
+        donate-while-compute-reads copy once instead of per expert."""
+        if not batch:
+            return
+        if self._write_many is None or len(batch) == 1:
+            for e, slot, payload in batch:
+                self._commit(e, slot, payload)
+            return
+        # pad to the next power of two by REPEATING entry 0: batch sizes
+        # vary per fence, and every distinct size is a fresh XLA compile
+        # of the scatter — pow2 bucketing caps that at log2(R) variants.
+        # A duplicated (slot, payload) pair writes identical values to
+        # the same index, so the scatter result is unchanged
+        k = len(batch)
+        if k == self.max_resident:
+            # every slot is being replaced: fresh store, old one dropped
+            by_slot = sorted(batch, key=lambda t: t[1])
+            self.slots = self._write_full(*(p for _, _, p in by_slot))
+        else:
+            full = batch + [batch[0]] * ((1 << (k - 1).bit_length()) - k)
+            idx = jnp.asarray([s for _, s, _ in full], jnp.int32)
+            self.slots = self._write_many(self.slots, idx,
+                                          *(p for _, _, p in full))
+        for e, slot, _ in batch:
+            self._slot_expert[slot] = e
+            self._lru[e] = slot
+            self.bytes_paged += self._expert_bytes
+
+    def ensure_submit(self, expert_ids, record: bool = True) -> list[int]:
+        """Async first half of ``ensure``: submit copies for every missing
+        id without fencing any — the per-expert transfers overlap each
+        other and whatever compute is already in flight.  Returns the ids
+        that must be fenced (``ensure_fence``) before dereferencing.
+        Requires a transfer engine."""
+        needed = self._check_working_set(expert_ids)
+        pinned = set(needed)
+        to_fence = []
+        for e in needed:
+            if e in self._inflight:
+                self._lru.move_to_end(e)
+                if record:
+                    self.hits += 1     # prefetch predicted it; fence below
+                to_fence.append(e)
+            elif e in self._lru:
+                self._lru.move_to_end(e)
+                if record:
+                    self.hits += 1
+            else:
+                if record:
+                    self.misses += 1
+                self._submit_async(e, pinned)
+                to_fence.append(e)
+        return to_fence
+
+    def ensure_fence(self, expert_ids) -> None:
+        """Fence+commit the in-flight members of ``expert_ids`` (the
+        second half of the async ``ensure``).  Payloads are fenced one by
+        one but committed as a single batched store write; if a fence
+        raises (hung transport), everything fenced before it still
+        commits — then the timeout propagates, loud."""
+        batch: list[tuple[int, int, dict]] = []
+        try:
+            for e in expert_ids:
+                e = int(e)
+                if e in self._inflight:
+                    slot, tr = self._inflight.pop(e)
+                    payload = self.engine.fence(tr)
+                    batch.append((e, slot, payload))
+                    self.inflight_joins += 1
+        finally:
+            self._commit_batch(batch)
+
+    def _check_working_set(self, expert_ids) -> list[int]:
         needed = list(dict.fromkeys(int(e) for e in expert_ids))
         if len(needed) > self.max_resident:
             raise ValueError(
                 f"{len(needed)} experts needed at once but only "
                 f"{self.max_resident} slots — page in waves")
+        return needed
+
+    def ensure(self, expert_ids, record: bool = True) -> None:
+        """Make every id in ``expert_ids`` device-resident (≤ max_resident).
+
+        With a transfer engine this is submit-all-then-fence-all, so the
+        misses' copies overlap each other; in-flight prefetches are fenced
+        (and counted as hits — the prediction converted demand paging into
+        an already-flying copy).  Without an engine it is the synchronous
+        PR-2 path, bit-for-bit."""
+        if self.engine is not None:
+            self.ensure_fence(self.ensure_submit(expert_ids, record=record))
+            return
+        needed = self._check_working_set(expert_ids)
         pinned = set(needed)
         for e in needed:
             if e in self._lru:
@@ -211,20 +424,49 @@ class ExpertCache:
                     self.misses += 1
                 self._page_in(e, pinned)
 
+    def _truncate_prefetch(self, expert_ids) -> list[int]:
+        ids = list(dict.fromkeys(int(e) for e in expert_ids))
+        keep, dropped = ids[: self.max_resident], ids[self.max_resident:]
+        if dropped:
+            self.prefetch_truncated += len(dropped)
+            self.prefetch_dropped.extend(dropped)
+        return keep
+
     def prefetch(self, expert_ids) -> None:
         """Warm residency (e.g. from ``ExpertUsage.hot``) without demand
         accounting — prefetched experts later hit in ``ensure``.
 
         A warm-up list longer than the slot count is truncated to the first
         ``max_resident`` (unique) ids; the tail is NOT silently dropped —
-        the dropped count and ids are recorded in the cache stats
-        (``prefetch_truncated`` / ``prefetch_dropped``)."""
-        ids = list(dict.fromkeys(int(e) for e in expert_ids))
-        keep, dropped = ids[: self.max_resident], ids[self.max_resident:]
-        if dropped:
-            self.prefetch_truncated += len(dropped)
-            self.prefetch_dropped = dropped
-        self.ensure(keep, record=False)
+        the dropped count and ids ACCUMULATE in the cache stats
+        (``prefetch_truncated`` / ``prefetch_dropped``, bounded deque)."""
+        self.ensure(self._truncate_prefetch(expert_ids), record=False)
+
+    def prefetch_async(self, expert_ids) -> list[int]:
+        """Router-lookahead warm-up: SUBMIT non-blocking copies for the
+        given ids and return immediately (no fence — the copies ride
+        behind whatever compute runs next; ``ensure`` fences them at the
+        point of use).  Falls back to the synchronous ``prefetch`` when no
+        engine is attached.  Returns the ids actually submitted."""
+        if self.engine is None:
+            self.prefetch(expert_ids)
+            return []
+        keep = self._truncate_prefetch(expert_ids)
+        pinned = set(keep)
+        submitted = []
+        for e in keep:
+            if e in self._lru:              # resident or already in flight
+                self._lru.move_to_end(e)
+                continue
+            self._submit_async(e, pinned)
+            self.async_prefetches += 1
+            submitted.append(e)
+        return submitted
+
+    def fence_all(self) -> None:
+        """Commit every outstanding in-flight transfer (a full barrier —
+        e.g. before tearing the cache down or snapshotting the store)."""
+        self.ensure_fence(list(self._inflight))
 
     def remap(self) -> np.ndarray:
         """(E,) int32: expert id -> device slot, ``-1`` for non-resident.
@@ -233,7 +475,12 @@ class ExpertCache:
         alias whatever expert happens to occupy slot 0.  Every dereference
         site masks (``PagedMoE`` wave fns select slot indices only where
         the wave mask holds) and the host-side wave loop asserts that all
-        wave ids map to real slots before launching the compute."""
+        wave ids map to real slots before launching the compute.
+
+        An in-flight (reserved, uncommitted) expert maps to its reserved
+        slot, whose STORE content is stale until ``ensure`` fences it —
+        callers must ensure() the ids they dereference first (the paged
+        wave loop always does)."""
         m = np.full((self.num_experts,), -1, np.int32)
         for s, e in enumerate(self._slot_expert):
             if e >= 0:
@@ -259,11 +506,13 @@ class ShardedExpertCache:
 
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
                  mesh, axis: str = "model",
-                 usage: Optional[ExpertUsage] = None):
+                 usage: Optional[ExpertUsage] = None,
+                 transfer_engine=None):
         if not host:
             raise ValueError("empty expert weight store")
         self.mesh = mesh
         self.axis = axis
+        self.engine = transfer_engine
         m = int(mesh.shape[axis])
         self.num_shards = m
         self.num_experts = next(iter(host.values())).shape[0]
@@ -299,7 +548,9 @@ class ShardedExpertCache:
                 self.slots = self._write(self.slots, dev,
                                          jnp.int32(_s), jnp.int32(slot))
 
-            return ExpertCache(local, rs, write_cb=write_cb)
+            return ExpertCache(local, rs, write_cb=write_cb,
+                               transfer_engine=transfer_engine,
+                               label=f"shard{s}")
 
         self.books = [_book(s) for s in range(m)]
         self._expert_bytes = self.books[0]._expert_bytes
@@ -340,7 +591,7 @@ class ShardedExpertCache:
             b.reset_stats()
 
     def stats(self) -> dict[str, Any]:
-        return {
+        out = {
             "hits": self.hits, "misses": self.misses,
             "evictions": self.evictions, "bytes_paged": self.bytes_paged,
             "hit_rate": self.hit_rate,
@@ -350,6 +601,18 @@ class ShardedExpertCache:
             "resident_fraction": self.total_slots / self.num_experts,
             "prefetch_truncated": self.prefetch_truncated,
         }
+        if self.engine is not None:
+            out.update({
+                "async_prefetches": self._sum("async_prefetches"),
+                "inflight_joins": self._sum("inflight_joins"),
+                "async_cancelled": self._sum("async_cancelled"),
+                "inflight": sum(len(b._inflight) for b in self.books),
+                # ONE engine serves every shard's book: read its ledger
+                # once here, not per book (no double counting)
+                "stall_s": self.engine.stats.stall_s,
+                "overlap_ratio": self.engine.stats.overlap_ratio,
+            })
+        return out
 
     # ------------------------------------------------------------- paging
 
@@ -361,8 +624,21 @@ class ShardedExpertCache:
         return by
 
     def ensure(self, expert_ids, record: bool = True) -> None:
-        """Make every (global) id resident on its owning shard."""
-        for s, local in self._by_shard(expert_ids).items():
+        """Make every (global) id resident on its owning shard.
+
+        With a transfer engine this is two phases — EVERY shard's missing
+        copies are submitted before ANY is fenced, so the per-shard
+        page-ins overlap each other (and the all-to-all dispatch of the
+        wave already on the device): the wave stalls for the slowest
+        shard's copy, not the sum of all shards' copies."""
+        by = self._by_shard(expert_ids)
+        if self.engine is not None:
+            pending = {s: self.books[s].ensure_submit(local, record=record)
+                       for s, local in by.items()}
+            for s, fence_ids in pending.items():
+                self.books[s].ensure_fence(fence_ids)
+            return
+        for s, local in by.items():
             self.books[s].ensure(local, record=record)
 
     def prefetch(self, expert_ids) -> None:
@@ -370,6 +646,19 @@ class ShardedExpertCache:
         ids, hottest first); per-shard truncation is recorded."""
         for s, local in self._by_shard(expert_ids).items():
             self.books[s].prefetch(local)
+
+    def prefetch_async(self, expert_ids) -> list[int]:
+        """Submit non-blocking copies of each shard's share of
+        ``expert_ids``; returns the GLOBAL ids actually submitted."""
+        submitted = []
+        for s, local in self._by_shard(expert_ids).items():
+            submitted.extend(s * self.e_local + e
+                             for e in self.books[s].prefetch_async(local))
+        return submitted
+
+    def fence_all(self) -> None:
+        for b in self.books:
+            b.fence_all()
 
     def remap(self) -> np.ndarray:
         """(E,) int32: expert id -> GLOBAL slot index ``shard*R + slot``
@@ -402,7 +691,8 @@ class PagedMoE:
                  usage: Optional[ExpertUsage] = None,
                  usage_decay: float = 0.9,
                  budget_bytes: Optional[int] = None,
-                 mesh=None, ep_axis: str = "model"):
+                 mesh=None, ep_axis: str = "model",
+                 transfer_engine=None):
         if cfg.impl not in ("grouped", "onehot"):
             raise ValueError(
                 "PagedMoE pages the grouped/onehot expert paths (ep_local "
@@ -454,11 +744,21 @@ class PagedMoE:
                                            * e_per_shard)))
         self.usage = usage or ExpertUsage(cfg.num_experts, cfg.num_tasks,
                                           decay=usage_decay)
+        # async paging: with a transfer engine the cache double-buffers —
+        # wave k+1's host→device copies are submitted while wave k
+        # computes, and usage-driven prefetches become non-blocking
+        self.engine = transfer_engine
         if self.mesh is not None:
             self.cache = ShardedExpertCache(host, max_resident, self.mesh,
-                                            axis=ep_axis, usage=self.usage)
+                                            axis=ep_axis, usage=self.usage,
+                                            transfer_engine=transfer_engine)
         else:
-            self.cache = ExpertCache(host, max_resident, usage=self.usage)
+            self.cache = ExpertCache(host, max_resident, usage=self.usage,
+                                     transfer_engine=transfer_engine)
+        # per-wave record of the most recent forward (wave id, expert
+        # count, lookahead submissions, fence stall) — the paged layer's
+        # contribution to the serve-time stall/overlap reports
+        self.last_timeline: list[dict] = []
         self.gate = jnp.asarray(params["gate"])
         gb = params.get("gate_bias")   # optional (tasks, E) logit bias
         self.gate_bias = None if gb is None else jnp.asarray(gb)
@@ -603,7 +903,15 @@ class PagedMoE:
 
         n = groups.shape[0]
         rows = jnp.zeros((n, g * cfg.top_k, d), groups.dtype)
-        for wave_ids in self._plan_waves(needed):
+        waves = self._plan_waves(needed)
+        eng = self.engine
+        timeline: list[dict] = []
+        for k, wave_ids in enumerate(waves):
+            stall0 = eng.stats.stall_s if eng is not None else 0.0
+            # fence point: everything this wave dereferences must have
+            # landed — in-flight lookahead copies commit here, anything
+            # mispredicted demand-pages (correctness never depends on
+            # prediction quality)
             self.cache.ensure(wave_ids)
             remap = self.cache.remap()
             # masking contract: every id this wave dereferences must be
@@ -615,6 +923,24 @@ class PagedMoE:
             rows = self._wave_fn(groups, routing, self.cache.slots,
                                  jnp.asarray(mask),
                                  jnp.asarray(remap), rows)
+            prefetched: list[int] = []
+            if eng is not None:
+                if k + 1 < len(waves):
+                    # router lookahead inside the batch: the wave launch
+                    # above is non-blocking, so wave k+1's copies are
+                    # submitted NOW and ride behind wave k's compute —
+                    # the double-buffer. Evicted slots are safe to retarget
+                    # (commits happen only at the next fence point).
+                    prefetched = self.cache.prefetch_async(waves[k + 1])
+                eng.on_wave()   # virtual-clock transports model the
+                #                 wave's compute time passing here
+            timeline.append({
+                "wave": k, "experts": len(wave_ids),
+                "lookahead_submitted": len(prefetched),
+                "stall_s": (eng.stats.stall_s - stall0) if eng is not None
+                else 0.0,
+            })
+        self.last_timeline = timeline
         y, aux = self._finish_fn(routing, rows, real)
         y = y.reshape(-1, d)[:t_total].reshape(orig_shape).astype(x.dtype)
 
@@ -644,11 +970,26 @@ class PagedMoE:
         return [sum((v[w * rs:(w + 1) * rs] for v in by.values()), [])
                 for w in range(n_waves)]
 
+    def predict(self, task_id: Optional[int] = None) -> list[int]:
+        """Router-lookahead prediction: the next batch's expert working
+        set, hottest first, from the per-task usage EMA (task-level
+        sparsity makes this stable — the paper's §IV-F premise)."""
+        budget = (self.cache.total_slots if self.mesh is not None
+                  else self.cache.max_resident)
+        return self.usage.hot(budget, task_id)
+
     def prefetch(self, task_id: Optional[int] = None) -> None:
         """Warm the device slots with the usage-EMA-hot experts for a task —
         called by the scheduler ahead of a task-bucket switch.  In the
         expert-parallel mode every shard warms its own bank with its share
-        of the hot set (aggregate residency = shards × bank size)."""
-        budget = (self.cache.total_slots if self.mesh is not None
-                  else self.cache.max_resident)
-        self.cache.prefetch(self.usage.hot(budget, task_id))
+        of the hot set (aggregate residency = shards × bank size).
+
+        With a transfer engine the warm-up is NON-BLOCKING: copies are
+        submitted and ride behind whatever computes next (the dense trunk
+        blocks ahead of this layer, or the previous task's tail); the
+        first wave that needs them fences."""
+        hot = self.predict(task_id)
+        if self.engine is not None:
+            self.cache.prefetch_async(hot)
+        else:
+            self.cache.prefetch(hot)

@@ -369,6 +369,16 @@ class Scheduler:
         bucket = self.buckets.get(task_id)
         return queued or (bucket is not None and bucket.active > 0)
 
+    def _peek_next_task(self, current: int, now: float) -> Optional[int]:
+        """The task the rotation will pick after ``current`` — the cross-
+        bucket lookahead target whose hot experts can stream behind the
+        quantum that is about to run."""
+        for off in range(len(self.rotation)):
+            t = self.rotation[(self._rr + off) % len(self.rotation)]
+            if t != current and self._runnable(t, now):
+                return t
+        return None
+
     def pending(self) -> bool:
         if any(self.queues.get(t) for t in self.rotation):
             return True
@@ -421,6 +431,16 @@ class Scheduler:
                         self.finished.extend(done)
 
                 admit()
+                # router lookahead across buckets: submit the NEXT task's
+                # usage-hot experts before this quantum launches, so their
+                # copies ride behind its compute.  The current task's own
+                # prefetch runs inside run_quantum AFTER this, so where the
+                # two sets conflict the current task wins the slots.
+                la = getattr(self.backend, "lookahead", None)
+                if la is not None:
+                    nxt = self._peek_next_task(task, now)
+                    if nxt is not None:
+                        la(nxt)
                 self.finished.extend(bucket.run_quantum(
                     self.quantum, self.now, admit_cb=admit))
                 return True

@@ -1,0 +1,383 @@
+"""Asynchronous host→device expert-weight transfers with explicit fences.
+
+Edge-MoE's premise is that expert weights *stream* past a small fast
+memory without ever stalling the compute pipeline (§IV-D).  The serving
+analogue is a **copy stream**: host→device page-ins are *submitted*
+non-blocking the moment the router makes the next wave predictable, run
+while the current wave computes, and are *fenced* (waited on) only at the
+point the weights are actually dereferenced.  This module is that copy
+stream, factored so the paging policy in ``serve/expert_cache.py`` never
+touches a clock or a thread directly:
+
+  * :class:`TransferEngine` — the production transport.  ``submit`` hands
+    the host arrays to a small worker pool that runs ``jax.device_put``
+    off the dispatch thread (JAX is thread-safe for transfers; this is
+    the software stand-in for a DMA copy queue), returning a
+    :class:`Transfer` handle immediately.  ``fence`` blocks until the
+    copy has landed, and *accounts the block*: time spent inside a fence
+    is ``stall_s`` (the copy was NOT hidden), time between submit and an
+    already-complete fence is ``hidden_s`` (the copy rode behind
+    compute).  ``overlap_ratio = hidden_s / (hidden_s + stall_s)`` is the
+    headline number: 1.0 means every byte streamed behind compute, 0.0
+    means fully synchronous demand paging.
+  * :class:`FakeTransferEngine` — the deterministic test transport.  Same
+    API, but time is a **virtual clock** the test owns: every transfer
+    completes ``latency_s`` after submit (per-key overrides via
+    ``schedule``), ``advance()`` models compute happening while copies
+    fly, ``complete()`` force-finishes a specific transfer, and a
+    ``None`` latency is a *hung* link — fencing it raises
+    :class:`TransferTimeout` instead of deadlocking.  Values are exact
+    (the host arrays are materialized at fence time), so adversarial
+    completion orders can only break *bookkeeping*, which is precisely
+    what the stall-injection suite hunts.
+  * :class:`TransferStats` — the shared ledger both engines fill in and
+    every ``stats()``/benchmark artifact reads (``stall_s``,
+    ``overlap_ratio``, fence/cancel/byte counters).
+
+Contract highlights (enforced by ``tests/test_async_paging.py``):
+
+  * a fence returns the payload exactly once; fencing twice is an error;
+  * ``cancel`` drops an in-flight transfer (its bytes are accounted as
+    ``bytes_cancelled``, never as paged) — the caller uses this when an
+    eviction retargets a slot whose prefetch never landed;
+  * timeouts are LOUD: a transfer that cannot complete raises
+    :class:`TransferTimeout` with the transfer key in the message.
+"""
+
+from __future__ import annotations
+
+import math
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from concurrent.futures import TimeoutError as _FutureTimeout
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["Transfer", "TransferStats", "TransferEngine",
+           "FakeTransferEngine", "TransferTimeout"]
+
+
+class TransferTimeout(RuntimeError):
+    """A fenced transfer did not complete within the engine timeout."""
+
+
+@dataclass
+class TransferStats:
+    """Ledger of copy-stream activity, shared by both transports.
+
+    ``stall_s`` is time a fence spent *blocked* (the copy was on the
+    critical path); ``hidden_s`` is submit→completion time that fences
+    did NOT have to wait for (the copy overlapped compute).  Demand
+    page-ins fence immediately after submit, so they contribute almost
+    pure stall; well-predicted prefetches contribute almost pure hidden
+    time.
+    """
+
+    submitted: int = 0
+    fenced: int = 0
+    fences_ready: int = 0        # fence found the copy already complete
+    fences_blocked: int = 0      # fence had to wait
+    cancelled: int = 0
+    timeouts: int = 0
+    bytes_submitted: int = 0
+    bytes_cancelled: int = 0
+    stall_s: float = 0.0
+    hidden_s: float = 0.0
+
+    @property
+    def active_s(self) -> float:
+        """Total transfer time observed (hidden + stalled)."""
+        return self.stall_s + self.hidden_s
+
+    @property
+    def overlap_ratio(self) -> float:
+        """Fraction of transfer time hidden behind compute.  1.0 when no
+        transfers happened (nothing to hide = nothing stalled)."""
+        tot = self.active_s
+        return self.hidden_s / tot if tot > 0 else 1.0
+
+    def as_dict(self) -> dict[str, Any]:
+        return {
+            "submitted": self.submitted, "fenced": self.fenced,
+            "fences_ready": self.fences_ready,
+            "fences_blocked": self.fences_blocked,
+            "cancelled": self.cancelled, "timeouts": self.timeouts,
+            "bytes_submitted": self.bytes_submitted,
+            "bytes_cancelled": self.bytes_cancelled,
+            "stall_s": self.stall_s, "hidden_s": self.hidden_s,
+            "overlap_ratio": self.overlap_ratio,
+        }
+
+    def reset(self) -> None:
+        for f in ("submitted", "fenced", "fences_ready", "fences_blocked",
+                  "cancelled", "timeouts", "bytes_submitted",
+                  "bytes_cancelled"):
+            setattr(self, f, 0)
+        self.stall_s = self.hidden_s = 0.0
+
+
+class Transfer:
+    """Handle for one in-flight host→device copy (one expert's leaves)."""
+
+    __slots__ = ("key", "nbytes", "t_submit", "done", "cancelled",
+                 "_payload", "_future", "ready_at")
+
+    def __init__(self, key: Any, nbytes: int, t_submit: float):
+        self.key = key
+        self.nbytes = int(nbytes)
+        self.t_submit = float(t_submit)
+        self.done = False           # fenced (payload handed out)
+        self.cancelled = False
+        self._payload: Optional[dict] = None
+        self._future = None         # real engine: worker-pool future
+        self.ready_at: float = 0.0  # fake engine: virtual completion time
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        state = ("cancelled" if self.cancelled
+                 else "done" if self.done else "inflight")
+        return f"Transfer({self.key!r}, {self.nbytes}B, {state})"
+
+
+def _nbytes(arrays: dict) -> int:
+    return sum(int(np.asarray(a).nbytes) if not hasattr(a, "nbytes")
+               else int(a.nbytes) for a in arrays.values())
+
+
+class TransferEngine:
+    """Production copy stream: worker-threaded ``jax.device_put``.
+
+    ``submit`` enqueues the copy on a small thread pool and returns a
+    handle immediately — the calling (dispatch) thread keeps launching
+    compute while the workers move bytes.  ``fence`` joins the worker
+    future and then blocks on the device arrays themselves
+    (``block_until_ready``), so a returned payload is guaranteed landed.
+    ``timeout_s`` bounds a fence; exceeding it raises
+    :class:`TransferTimeout` (a hung transport must be loud, never a
+    deadlock).
+
+    The engine is intentionally policy-free: it neither knows about
+    experts nor slots.  Keys are opaque and only used for error messages
+    and the fake engine's ``schedule``/``complete`` hooks.
+    """
+
+    def __init__(self, workers: int = 2, timeout_s: Optional[float] = 60.0,
+                 clock: Callable[[], float] = time.perf_counter):
+        self._workers = max(1, int(workers))
+        self._pool = ThreadPoolExecutor(
+            max_workers=self._workers,
+            thread_name_prefix="transfer-engine")
+        self.timeout_s = timeout_s
+        self._clock = clock
+        self.stats = TransferStats()
+        self._lock = threading.Lock()
+
+    def now(self) -> float:
+        return self._clock()
+
+    # ------------------------------------------------------------ stream
+
+    def submit(self, key: Any, arrays: dict) -> Transfer:
+        """Begin a non-blocking host→device copy of ``arrays`` (a dict of
+        host ndarrays).  Returns immediately."""
+        t = Transfer(key, _nbytes(arrays), self.now())
+        # snapshot the host views: the worker must not race a caller that
+        # mutates the host store after submit
+        host = {n: np.asarray(a) for n, a in arrays.items()}
+        t._future = self._pool.submit(
+            lambda: {n: jax.device_put(a) for n, a in host.items()})
+        with self._lock:
+            self.stats.submitted += 1
+            self.stats.bytes_submitted += t.nbytes
+        return t
+
+    def ready(self, t: Transfer) -> bool:
+        """Non-blocking completion poll."""
+        if t.done or t.cancelled:
+            return t.done
+        if not t._future.done():
+            return False
+        payload = t._future.result()
+        return all(a.is_ready() if hasattr(a, "is_ready") else True
+                   for a in payload.values())
+
+    def fence(self, t: Transfer) -> dict:
+        """Block until ``t`` has landed on device; returns its payload.
+
+        The block time is accounted as ``stall_s``; submit→fence time
+        that required no blocking is ``hidden_s`` (copy overlapped
+        compute).  Raises :class:`TransferTimeout` after ``timeout_s``.
+        """
+        if t.cancelled:
+            raise RuntimeError(f"fence on cancelled transfer {t.key!r}")
+        if t.done:
+            raise RuntimeError(f"double fence on transfer {t.key!r}")
+        t0 = self.now()
+        was_ready = self.ready(t)
+        try:
+            payload = t._future.result(timeout=self.timeout_s)
+            jax.block_until_ready(payload)
+        except (_FutureTimeout, TimeoutError):
+            with self._lock:
+                self.stats.timeouts += 1
+            raise TransferTimeout(
+                f"transfer {t.key!r} ({t.nbytes} bytes) did not complete "
+                f"within {self.timeout_s}s") from None
+        t1 = self.now()
+        with self._lock:
+            self.stats.fenced += 1
+            if was_ready:
+                self.stats.fences_ready += 1
+            else:
+                self.stats.fences_blocked += 1
+            self.stats.stall_s += t1 - t0
+            # pre-fence flight time: hidden behind whatever the caller
+            # was doing between submit and fence
+            self.stats.hidden_s += max(0.0, t0 - t.t_submit)
+        t.done = True
+        t._payload = payload
+        return payload
+
+    def cancel(self, t: Transfer) -> None:
+        """Drop an in-flight transfer: its payload will never be
+        committed (the worker may still finish the copy; the buffers are
+        simply garbage-collected)."""
+        if t.done or t.cancelled:
+            return
+        t.cancelled = True
+        t._future.cancel()
+        with self._lock:
+            self.stats.cancelled += 1
+            self.stats.bytes_cancelled += t.nbytes
+
+    def on_wave(self, seconds: Optional[float] = None) -> None:
+        """Compute-progress hook: a wave was launched.  Wall time advances
+        by itself for the real transport — this is a no-op here and a
+        virtual-clock tick on :class:`FakeTransferEngine`."""
+
+    def drain(self) -> None:
+        """Testing/shutdown aid: wait for all queued copies."""
+        self._pool.shutdown(wait=True)
+        self._pool = ThreadPoolExecutor(max_workers=self._workers,
+                                        thread_name_prefix="transfer-engine")
+
+    def reset_stats(self) -> None:
+        self.stats.reset()
+
+
+class FakeTransferEngine:
+    """Deterministic stall-injection transport with a virtual clock.
+
+    Test control surface:
+
+      * ``latency_s``      — default virtual copy duration per transfer;
+      * ``schedule``       — ``{key: latency}`` per-key overrides; a
+        ``None`` latency is a HUNG link (never completes; a fence raises
+        :class:`TransferTimeout` instead of waiting forever);
+      * ``wave_s``         — how much virtual time one compute wave is
+        worth; ``on_wave()`` (called by ``PagedMoE`` after launching a
+        wave) advances the clock by it, modelling copies flying while the
+        wave computes;
+      * ``advance(dt)``    — explicit clock tick;
+      * ``complete(key)``  — force a specific in-flight transfer to be
+        complete *now* (adversarial completion orderings).
+
+    Payload values are materialized from the host arrays at fence time,
+    so timing can never alter results — only the bookkeeping around them
+    (which is the point of the harness).
+    """
+
+    def __init__(self, latency_s: float = 0.0,
+                 schedule: Optional[dict] = None,
+                 timeout_s: float = 30.0,
+                 wave_s: float = 0.0):
+        self.t = 0.0
+        self.latency_s = float(latency_s)
+        self.schedule = dict(schedule or {})
+        self.timeout_s = float(timeout_s)
+        self.wave_s = float(wave_s)
+        self.stats = TransferStats()
+        self._inflight: dict[Any, Transfer] = {}
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        """Tick the virtual clock: copies in flight make ``dt`` seconds
+        of progress."""
+        self.t += float(dt)
+
+    def on_wave(self, seconds: Optional[float] = None) -> None:
+        self.advance(self.wave_s if seconds is None else seconds)
+
+    def complete(self, key: Any) -> None:
+        """Force the in-flight transfer with ``key`` to complete now."""
+        t = self._inflight.get(key)
+        if t is None:
+            raise KeyError(f"no in-flight transfer with key {key!r}")
+        t.ready_at = self.t
+
+    # ------------------------------------------------------------ stream
+
+    def _latency(self, key: Any) -> Optional[float]:
+        return self.schedule.get(key, self.latency_s)
+
+    def submit(self, key: Any, arrays: dict) -> Transfer:
+        t = Transfer(key, _nbytes(arrays), self.t)
+        lat = self._latency(key)
+        t.ready_at = math.inf if lat is None else self.t + float(lat)
+        # hold HOST copies: a late mutation of the cache's host store must
+        # not retroactively change what this transfer delivers
+        t._payload = {n: np.array(a, copy=True) for n, a in arrays.items()}
+        self._inflight[key] = t
+        self.stats.submitted += 1
+        self.stats.bytes_submitted += t.nbytes
+        return t
+
+    def ready(self, t: Transfer) -> bool:
+        return (not t.cancelled) and t.ready_at <= self.t
+
+    def fence(self, t: Transfer) -> dict:
+        if t.cancelled:
+            raise RuntimeError(f"fence on cancelled transfer {t.key!r}")
+        if t.done:
+            raise RuntimeError(f"double fence on transfer {t.key!r}")
+        if not self.ready(t):
+            wait = t.ready_at - self.t
+            if wait > self.timeout_s:
+                self.stats.timeouts += 1
+                raise TransferTimeout(
+                    f"transfer {t.key!r} ({t.nbytes} bytes) hung: needs "
+                    f"{'forever' if math.isinf(wait) else f'{wait:.3f}s'} "
+                    f"> timeout {self.timeout_s}s of virtual time")
+            self.stats.fences_blocked += 1
+            self.stats.stall_s += wait
+            # the flight time BEFORE the fence started overlapped whatever
+            # the caller was doing (however the test advanced the clock)
+            self.stats.hidden_s += max(0.0, self.t - t.t_submit)
+            self.t = t.ready_at
+        else:
+            self.stats.fences_ready += 1
+            # copy finished before the fence: its whole duration was hidden
+            self.stats.hidden_s += max(0.0, t.ready_at - t.t_submit)
+        self.stats.fenced += 1
+        t.done = True
+        self._inflight.pop(t.key, None)
+        payload = {n: jax.device_put(a) for n, a in t._payload.items()}
+        t._payload = payload
+        return payload
+
+    def cancel(self, t: Transfer) -> None:
+        if t.done or t.cancelled:
+            return
+        t.cancelled = True
+        t._payload = None
+        self._inflight.pop(t.key, None)
+        self.stats.cancelled += 1
+        self.stats.bytes_cancelled += t.nbytes
+
+    def reset_stats(self) -> None:
+        self.stats.reset()

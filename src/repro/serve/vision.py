@@ -31,6 +31,7 @@ from repro.models import vit as V
 from repro.ops.policy import use_policy
 from repro.serve.expert_cache import PagedMoE
 from repro.serve.scheduler import Request
+from repro.serve.transfer import TransferEngine
 
 __all__ = ["M3ViTServer", "VisionBackend"]
 
@@ -53,17 +54,31 @@ class M3ViTServer:
     expert weights — stays replicated/local, and ONLY the MoE layers go
     expert-parallel over the mesh.  Pass it without ``rules`` to get
     expert parallelism with zero collectives in the dense blocks.
+
+    ``async_paging`` attaches one shared :class:`TransferEngine` to every
+    MoE layer's ``PagedMoE``: expert page-ins become non-blocking copies
+    that ride behind compute (a layer's prefetch streams while earlier
+    dense blocks run; wave k+1's copies stream while wave k computes) and
+    are fenced only at the point of use — the serve-time realization of
+    the paper's never-stall expert streaming.  Results are bit-identical
+    to synchronous paging (tested); only the stall time moves.  Pass
+    ``transfer_engine`` to inject a transport (e.g. the deterministic
+    ``FakeTransferEngine`` in tests).
     """
 
     def __init__(self, cfg: ArchConfig, params,
                  resident_fraction: float = 0.5,
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
-                 ep_mesh=None):
+                 ep_mesh=None, async_paging: bool = False,
+                 transfer_engine=None):
         if cfg.family != "vit-moe":
             raise ValueError("M3ViTServer serves the vit-moe family")
         self.cfg = cfg
         self.rules = rules
+        if transfer_engine is None and async_paging:
+            transfer_engine = TransferEngine()
+        self.engine = transfer_engine
         mesh = ep_mesh if ep_mesh is not None else (
             rules.mesh if rules is not None else None)
         self.params = params
@@ -88,7 +103,7 @@ class M3ViTServer:
             i: PagedMoE(self.layer_params[i]["moe"], self.mcfg,
                         resident_fraction=resident_fraction,
                         budget_bytes=expert_budget_bytes,
-                        mesh=mesh)
+                        mesh=mesh, transfer_engine=self.engine)
             for i, kind in enumerate(self.kinds) if kind == "attn_moe"
         }
 
@@ -155,22 +170,48 @@ class M3ViTServer:
 
     def prefetch(self, task_id: int) -> None:
         """Warm every MoE layer's expert cache with the task's hot set —
-        called by the scheduler ahead of a task-bucket switch."""
+        called by the scheduler ahead of a task-bucket switch.  With async
+        paging this only SUBMITS the copies (router-lookahead prefetch);
+        each layer fences its own experts when its wave needs them."""
         for paged in self.paged.values():
             paged.prefetch(task_id)
 
+    # scheduler lookahead hook: identical to prefetch, but named for the
+    # cross-bucket case — stream the NEXT bucket's hot set behind the
+    # quantum that is about to run
+    lookahead = prefetch
+
     def cache_stats(self) -> dict[str, Any]:
         agg = {"hits": 0, "misses": 0, "evictions": 0, "bytes_paged": 0}
+        async_agg = {"async_prefetches": 0, "inflight_joins": 0,
+                     "async_cancelled": 0}
         frac = 0.0
         for paged in self.paged.values():
             s = paged.cache.stats()
             for k in ("hits", "misses", "evictions", "bytes_paged"):
                 agg[k] += s[k]
+            for k in async_agg:
+                async_agg[k] += s.get(k, 0)
             frac = s["resident_fraction"]
         tot = agg["hits"] + agg["misses"]
         agg["hit_rate"] = agg["hits"] / tot if tot else 1.0
         agg["resident_fraction"] = frac
+        if self.engine is not None:
+            # one engine is shared by every layer, so stall/overlap are
+            # read from its single ledger, not summed per layer
+            agg.update(async_agg)
+            agg["stall_s"] = self.engine.stats.stall_s
+            agg["hidden_s"] = self.engine.stats.hidden_s
+            agg["overlap_ratio"] = self.engine.stats.overlap_ratio
         return agg
+
+    def reset_stats(self) -> None:
+        """Zero cache counters AND the shared transfer ledger — call at a
+        measurement boundary so stall_s/overlap_ratio cover one interval."""
+        for paged in self.paged.values():
+            paged.cache.reset_stats()
+        if self.engine is not None:
+            self.engine.reset_stats()
 
 
 class VisionTaskBucket:
@@ -228,16 +269,30 @@ class VisionBackend:
                  resident_fraction: float = 0.5,
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
-                 ep_mesh=None):
+                 ep_mesh=None, async_paging: bool = False,
+                 transfer_engine=None):
         self.server = M3ViTServer(cfg, params,
                                   resident_fraction=resident_fraction,
                                   expert_budget_bytes=expert_budget_bytes,
-                                  rules=rules, ep_mesh=ep_mesh)
+                                  rules=rules, ep_mesh=ep_mesh,
+                                  async_paging=async_paging,
+                                  transfer_engine=transfer_engine)
         self.num_tasks = len(MV.TASKS)
         self.usage = None   # per-layer usage lives inside each PagedMoE
 
     def make_bucket(self, task_id: int, slots: int) -> VisionTaskBucket:
         return VisionTaskBucket(self, task_id, slots)
 
+    def lookahead(self, task_id: int) -> None:
+        """Scheduler hook: stream task ``task_id``'s usage-hot experts
+        behind the quantum about to run.  No-op without a transfer engine —
+        a synchronous lookahead would BLOCK before the quantum (the exact
+        stall this feature removes) and evict the current task's set."""
+        if self.server.engine is not None:
+            self.server.lookahead(task_id)
+
     def cache_stats(self) -> dict[str, Any]:
         return self.server.cache_stats()
+
+    def reset_stats(self) -> None:
+        self.server.reset_stats()

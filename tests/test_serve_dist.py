@@ -247,9 +247,100 @@ VISION_PARITY = HEADER + textwrap.dedent("""
 """)
 
 
+ASYNC_SHARDED_PARITY = HEADER + textwrap.dedent("""
+    # mesh-2 async paging == PR-5 synchronous paging, token for token:
+    # per-shard page-ins overlap the all-to-all dispatch (two-phase
+    # submit/fence across shard books) on BOTH the real worker-pool
+    # transport and an adversarial virtual-clock schedule, fp32 + int8
+    from repro.core import moe as moe_lib
+    from repro.ops import policy_named, use_policy
+    from repro.quant import quantize_tree
+    from repro.serve.expert_cache import PagedMoE
+    from repro.serve.transfer import FakeTransferEngine, TransferEngine
+
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    cfg = moe_lib.MoEConfig(d_model=32, d_ff=64, num_experts=8, top_k=2,
+                            num_tasks=2, capacity_factor=2.0, group_size=64,
+                            impl="grouped", expert_kind="swiglu")
+    params = moe_lib.init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32)
+    x = (jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
+         * 0.5).astype(jnp.float32)
+    # staggered per-shard latencies: shard1's copies land LATE relative
+    # to shard0's, so fences interleave adversarially across books
+    sched = {(f"shard{s}", e): 0.25 + 2.0 * s + 0.5 * e
+             for s in (0, 1) for e in range(4)}
+    for task in (0, 1):
+        ref, _ = PagedMoE(params, cfg, resident_fraction=0.5,
+                          mesh=mesh)(x, task_id=task)
+        for eng in (TransferEngine(timeout_s=60.0),
+                    FakeTransferEngine(schedule=sched, wave_s=1.0,
+                                       timeout_s=1e9)):
+            paged = PagedMoE(params, cfg, resident_fraction=0.5,
+                             mesh=mesh, transfer_engine=eng)
+            y, _ = paged(x, task_id=task)
+            np.testing.assert_array_equal(
+                np.asarray(y), np.asarray(ref),
+                err_msg=f"task={task} {type(eng).__name__}")
+            s = paged.cache.stats()
+            assert "stall_s" in s and "overlap_ratio" in s, s
+            assert 0.0 <= s["overlap_ratio"] <= 1.0, s
+    for bits in (8, 4):
+        qparams = quantize_tree(dict(params), bits=bits)
+        with use_policy(policy_named("xla_int8")):
+            qref, _ = PagedMoE(qparams, cfg, resident_fraction=0.5,
+                               mesh=mesh)(x, task_id=0)
+            qy, _ = PagedMoE(qparams, cfg, resident_fraction=0.5,
+                             mesh=mesh,
+                             transfer_engine=FakeTransferEngine(
+                                 schedule=sched, wave_s=1.0,
+                                 timeout_s=1e9))(x, task_id=0)
+        np.testing.assert_array_equal(np.asarray(qy), np.asarray(qref),
+                                      err_msg=f"int{bits} async mesh=2")
+    print("ASYNC_SHARDED_PARITY_OK")
+""")
+
+
+SHARD_HANG = HEADER + textwrap.dedent("""
+    # a shard whose transfer link hangs must raise a LOUD TransferTimeout
+    # from the two-phase ensure — never deadlock the serving loop.  The
+    # healthy shard's copy still lands (submitted before the hung fence).
+    import numpy as _np
+    from repro.serve.expert_cache import ShardedExpertCache
+    from repro.serve.transfer import FakeTransferEngine, TransferTimeout
+
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    rng = _np.random.default_rng(0)
+    host = {"w": rng.standard_normal((8, 4, 4)).astype(_np.float32)}
+    eng = FakeTransferEngine(latency_s=0.1, timeout_s=5.0,
+                             schedule={("shard1", 0): None})   # hung link
+    cache = ShardedExpertCache(host, 2, mesh, transfer_engine=eng)
+    try:
+        cache.ensure([0, 4])     # shard0 local 0 (fine), shard1 local 0 (hung)
+    except TransferTimeout as e:
+        assert "shard1" in str(e) and "hung" in str(e), str(e)
+    else:
+        raise AssertionError("hung shard did not raise TransferTimeout")
+    assert eng.stats.timeouts == 1
+    # the healthy shard committed its expert before the hang surfaced
+    assert 0 in cache.resident, cache.resident
+    print("SHARD_HANG_OK")
+""")
+
+
 def test_paged_moe_sharded_bit_exact():
     """Expert-parallel PagedMoE == apply_moe at mesh 2 and 4 (fp32+bf16)."""
     assert "PAGED_PARITY_OK" in _run(PAGED_PARITY)
+
+
+def test_async_sharded_token_identical():
+    """Mesh-2 async paging (real + adversarial fake transport, fp32/int8/
+    int4) emits exactly the synchronous path's values."""
+    assert "ASYNC_SHARDED_PARITY_OK" in _run(ASYNC_SHARDED_PARITY)
+
+
+def test_hung_shard_raises_loud_timeout():
+    """A hung shard transfer raises TransferTimeout, not a deadlock."""
+    assert "SHARD_HANG_OK" in _run(SHARD_HANG)
 
 
 def test_paged_moe_sharded_quantized_bit_exact():
