@@ -6,6 +6,11 @@
   table5_ablation    — Table V   (cumulative technique ablation on M³ViT)
   fig12_breakdown    — Fig. 12   (per-component latency/cost breakdown)
   serve_throughput   — continuous batching vs static serving
+  serve_slo          — SLO-aware serving: tiered admission + preemption
+                       (KV park/restore) + chunked prefill vs plain
+                       continuous batching on a bursty trace; radix
+                       prompt-prefix cache savings; JSON acceptance
+                       artifact (interactive p99 TTFT, goodput)
   serve_dist         — mesh sweep (1/2/4/8 host-device shards): paged
                        M³ViT tok/s + expert-cache hit rate at a fixed
                        per-device expert budget, JSON acceptance artifact
@@ -26,7 +31,7 @@ from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
            "table5_ablation", "fig12_breakdown", "serve_throughput",
-           "serve_dist", "ops_dispatch", "quant_memory"]
+           "serve_slo", "serve_dist", "ops_dispatch", "quant_memory"]
 
 
 def main() -> int:

@@ -1,0 +1,205 @@
+"""SLO serving benchmark: tiered scheduling vs plain continuous batching.
+
+Drives the SAME seeded bursty multi-tenant trace (``repro.serve.slo.trace``
+— heavy-tailed batch outputs, long batch prompts, 50% interactive requests
+with a TTFT deadline) through the continuous-batching scheduler twice:
+
+  * **baseline**: no SLO policy — admission is arrival-order round-robin,
+    long batch prompts prefill one-shot at admission and batch-tier decodes
+    hold their slots through interactive bursts;
+  * **slo**: ``SLOPolicy(preemption=True, chunk_interleave=True)`` —
+    interactive-first admission, due interactive requests preempt
+    batch-tier slots (KV park/restore, bit-exact — see
+    ``tests/test_slo_serve.py``), and long prompts prefill one chunk per
+    decode step instead of head-of-line-blocking the batch.
+
+The headline numbers are interactive p99 TTFT (the burst tail the policy
+exists to cut) and goodput-under-SLO (finished requests meeting their
+deadlines per second — preemption must not BUY latency with throughput).
+A third section enables the radix prompt-prefix cache on a tenant-skewed
+trace (every tenant shares a system-prompt prefix) and reports prefill
+tokens skipped.
+
+Acceptance flags (written to the JSON artifact; ``run`` raises if any
+fails, which is what the CI ``slo_serving`` job checks):
+
+  * ``accept_ttft_2x``       — baseline interactive p99 TTFT >= 2x the
+                               SLO run's;
+  * ``accept_goodput``       — SLO-run goodput >= baseline goodput
+                               (small tolerance for host timing noise);
+  * ``accept_preemption``    — the SLO run actually preempted and
+                               restored (the trace exercises the path);
+  * ``accept_prefix_savings``— the prefix cache skipped >= 10% of all
+                               prefill tokens on the tenant-skewed trace.
+
+Emits CSV rows through the harness; JSON artifact path defaults to
+``benchmarks/out/serve_slo.json`` (``BENCH_SLO_JSON`` overrides).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from repro import configs
+from repro.models import model as M
+from repro.serve import LMBackend, Scheduler, ServeConfig
+from repro.serve.slo import SLOPolicy, TraceConfig, TraceGenerator
+
+JSON_PATH = os.environ.get(
+    "BENCH_SLO_JSON",
+    os.path.join(os.path.dirname(__file__), "out", "serve_slo.json"))
+
+CAPACITY = 4    # few enough decode slots that bursts actually queue
+QUANTUM = 4
+MAX_LEN = 256
+CHUNK = 32      # 96-128-token batch prompts -> 3-4 interleaved chunks
+
+
+def _trace_cfg(quick: bool, **over) -> TraceConfig:
+    """The benchmark trace: interactive bursts landing on top of long
+    batch prompts with heavy-tailed outputs — the regime where FIFO
+    admission's interactive tail collapses."""
+    base = dict(
+        n=24 if quick else 64,
+        seed=7,
+        num_tasks=2,
+        mean_interarrival_s=0.02,
+        burst_factor=8.0,
+        interactive_frac=0.5,
+        interactive_prompt=(8, 16),
+        interactive_new=(4, 10),
+        batch_prompt=(96, 128),      # long prefills: the HOL-blocking fuel
+        batch_new=(48, 96),          # long decodes: slots stay occupied
+                                     # through the interactive bursts
+    )
+    base.update(over)
+    return TraceConfig(**base)
+
+
+def _make_backend(scfg: ServeConfig):
+    cfg = configs.get("kimi_k2_1t_a32b", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    return cfg, LMBackend(cfg, params, scfg)
+
+
+def _serve(backend, trace_cfg: TraceConfig, slo) -> dict:
+    sched = Scheduler(backend, total_slots=CAPACITY, quantum=QUANTUM,
+                      num_tasks=2, slo=slo)
+    sched.run(TraceGenerator(trace_cfg).generate())
+    return sched.metrics()
+
+
+def run(quick: bool = False):
+    rows = []
+    vocab = configs.get("kimi_k2_1t_a32b", smoke=True).vocab_size
+    tc = _trace_cfg(quick, vocab=vocab)
+
+    # one backend per configuration (jit caches are per-backend; a fresh
+    # scheduler per run keeps the decode state independent)
+    scfg = ServeConfig(max_len=MAX_LEN, prefill_chunk=CHUNK)
+    _, backend = _make_backend(scfg)
+
+    # warmup: compile every step variant both runs will touch
+    warm = _trace_cfg(True, vocab=vocab, n=8, seed=1)
+    _serve(backend, warm, None)
+    _serve(backend, warm, SLOPolicy())
+
+    base = _serve(backend, tc, None)
+    slo = _serve(backend, tc, SLOPolicy(preemption=True,
+                                        chunk_interleave=True))
+
+    b_int = base["tiers"]["interactive"]
+    s_int = slo["tiers"]["interactive"]
+    ttft_ratio = b_int["ttft_p99_s"] / max(s_int["ttft_p99_s"], 1e-9)
+
+    # prefix-cache section: tenant-skewed trace, every tenant sharing a
+    # 32-token system prompt, served with the radix cache attached
+    ptc = _trace_cfg(quick, vocab=vocab, shared_prefix_len=32,
+                     num_tenants=4, seed=11)
+    _, pbackend = _make_backend(
+        ServeConfig(max_len=MAX_LEN, prefill_chunk=CHUNK, prefix_cache=16,
+                    prefix_min=8))
+    preqs = TraceGenerator(ptc).generate()
+    prompt_tokens = sum(len(r.prompt) for r in preqs)
+    psched = Scheduler(pbackend, total_slots=CAPACITY, quantum=QUANTUM,
+                       num_tasks=2, slo=SLOPolicy())
+    psched.run(preqs)
+    pm = psched.metrics()
+    pstats = pm["prefix_cache"]
+    savings = pstats["hit_tokens"] / max(prompt_tokens, 1)
+
+    out = {
+        "capacity": CAPACITY,
+        "trace": {"n": tc.n, "seed": tc.seed,
+                  "interactive_frac": tc.interactive_frac,
+                  "burst_factor": tc.burst_factor},
+        "baseline": {
+            "interactive_ttft_p50_s": b_int["ttft_p50_s"],
+            "interactive_ttft_p99_s": b_int["ttft_p99_s"],
+            "goodput_rps": base["goodput_rps"],
+            "slo_attainment": base["slo_attainment"],
+            "tok_per_s": base["tok_per_s"],
+        },
+        "slo": {
+            "interactive_ttft_p50_s": s_int["ttft_p50_s"],
+            "interactive_ttft_p99_s": s_int["ttft_p99_s"],
+            "goodput_rps": slo["goodput_rps"],
+            "slo_attainment": slo["slo_attainment"],
+            "tok_per_s": slo["tok_per_s"],
+            "preemptions": slo["preemptions"],
+            "restores": slo["restores"],
+            "parked_bytes_peak": slo["parked_bytes_peak"],
+            "prefill_chunks": slo.get("prefill_chunks", 0),
+        },
+        "ttft_p99_ratio": ttft_ratio,
+        "prefix": {
+            "prompt_tokens": prompt_tokens,
+            "hit_tokens": pstats["hit_tokens"],
+            "hit_rate": pstats["hit_rate"],
+            "entries": pstats["entries"],
+            "savings_frac": savings,
+        },
+        "accept_ttft_2x": ttft_ratio >= 2.0,
+        "accept_goodput": slo["goodput_rps"] >= 0.9 * base["goodput_rps"],
+        "accept_preemption": slo["preemptions"] > 0
+        and slo["restores"] > 0,
+        "accept_prefix_savings": savings >= 0.10,
+    }
+    os.makedirs(os.path.dirname(JSON_PATH), exist_ok=True)
+    with open(JSON_PATH, "w") as f:
+        json.dump(out, f, indent=2, default=float)
+    print(f"[serve_slo] wrote {JSON_PATH}")
+
+    rows.append(("serve_slo_baseline_ttft_p99",
+                 b_int["ttft_p99_s"] * 1e6,
+                 f"goodput_rps={base['goodput_rps']:.2f}"))
+    rows.append(("serve_slo_tiered_ttft_p99",
+                 s_int["ttft_p99_s"] * 1e6,
+                 f"goodput_rps={slo['goodput_rps']:.2f};"
+                 f"preempt={slo['preemptions']};"
+                 f"ttft_ratio={ttft_ratio:.2f}"))
+    rows.append(("serve_slo_prefix",
+                 pm["ttft_p99_s"] * 1e6,
+                 f"hit_tokens={pstats['hit_tokens']};"
+                 f"savings={savings:.3f}"))
+
+    failed = [k for k in ("accept_ttft_2x", "accept_goodput",
+                          "accept_preemption", "accept_prefix_savings")
+              if not out[k]]
+    if failed:
+        raise RuntimeError(f"serve_slo acceptance failed {failed}: "
+                           f"ttft_ratio={ttft_ratio:.2f}, "
+                           f"goodput {slo['goodput_rps']:.2f} vs "
+                           f"{base['goodput_rps']:.2f}, "
+                           f"preemptions={slo['preemptions']}, "
+                           f"savings={savings:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run(quick=True):
+        print(",".join(str(c) for c in row))

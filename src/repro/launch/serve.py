@@ -20,6 +20,11 @@ Usage:
   # host (CPU) shards, same as dryrun / the dist tests:
   python -m repro.launch.serve --arch llama3_2_1b --smoke --mesh 2x2
   python -m repro.launch.serve --arch m3vit --smoke --scheduler --mesh 1x4
+  # SLO-aware serving: tiered admission + preemption (KV park/restore) +
+  # chunked-prefill interleave, driven by a bursty multi-tenant trace,
+  # with a shared prompt-prefix cache:
+  python -m repro.launch.serve --arch kimi_k2_1t_a32b --smoke --scheduler \
+      --slo --trace bursty --prefix-cache 16 --prefill-chunk 16
 """
 
 from __future__ import annotations
@@ -84,25 +89,40 @@ from repro.serve import LMBackend, Request, Scheduler, ServeConfig, ServingEngin
 
 
 def _serve_scheduler_lm(cfg, params, scfg, args, key, rules=None) -> int:
+    from repro.serve.slo import SLOPolicy, TraceConfig, TraceGenerator
+
     backend = LMBackend(cfg, params, scfg, rules=rules)
     num_tasks = max(args.tasks, 1)
     if cfg.moe is not None:      # gate table bounds the task-id space
         num_tasks = min(num_tasks, backend.num_tasks)
+    slo = SLOPolicy() if args.slo else None
     sched = Scheduler(backend, total_slots=args.batch, quantum=4,
-                      num_tasks=num_tasks)
-    rng = np.random.default_rng(args.seed)
-    if cfg.embed_input == "tokens":
-        prompts = rng.integers(0, cfg.vocab_size,
-                               (args.requests, args.prompt_len))
+                      num_tasks=num_tasks, slo=slo)
+    if args.trace:
+        if cfg.embed_input != "tokens":
+            raise SystemExit("--trace generates token prompts; "
+                             f"arch {cfg.name} embeds raw inputs")
+        tc = TraceConfig(
+            n=args.requests, seed=args.seed, vocab=cfg.vocab_size,
+            num_tasks=num_tasks,
+            burst_factor=8.0 if args.trace == "bursty" else 1.0,
+            shared_prefix_len=16 if scfg.prefix_cache > 0 else 0)
+        reqs = TraceGenerator(tc).generate()
     else:
-        prompts = rng.standard_normal(
-            (args.requests, args.prompt_len, cfg.d_model)).astype(np.float32)
-    lengths = rng.integers(max(args.tokens // 4, 1), args.tokens + 1,
-                           args.requests)
-    reqs = [Request(rid=i, task_id=i % num_tasks,
-                    prompt=np.asarray(prompts[i], prompts.dtype),
-                    max_new_tokens=int(lengths[i]))
-            for i in range(args.requests)]
+        rng = np.random.default_rng(args.seed)
+        if cfg.embed_input == "tokens":
+            prompts = rng.integers(0, cfg.vocab_size,
+                                   (args.requests, args.prompt_len))
+        else:
+            prompts = rng.standard_normal(
+                (args.requests, args.prompt_len, cfg.d_model)
+            ).astype(np.float32)
+        lengths = rng.integers(max(args.tokens // 4, 1), args.tokens + 1,
+                               args.requests)
+        reqs = [Request(rid=i, task_id=i % num_tasks,
+                        prompt=np.asarray(prompts[i], prompts.dtype),
+                        max_new_tokens=int(lengths[i]))
+                for i in range(args.requests)]
     done = sched.run(reqs)
     m = sched.metrics()
     print(f"[serve] arch={cfg.name} scheduler served {len(done)} requests "
@@ -110,6 +130,24 @@ def _serve_scheduler_lm(cfg, params, scfg, args, key, rules=None) -> int:
           f"{m['tok_per_s']:.1f} tok/s, p50 {m['latency_p50_s']*1e3:.0f}ms, "
           f"p99 {m['latency_p99_s']*1e3:.0f}ms, "
           f"slot util {m.get('slot_utilization', 0):.2f}")
+    for name, tm in sorted(m.get("tiers", {}).items()):
+        if slo is None and not args.trace:
+            break
+        print(f"[serve]   tier {name}: {tm['requests']} reqs, "
+              f"ttft p50 {tm['ttft_p50_s']*1e3:.0f}ms / "
+              f"p99 {tm['ttft_p99_s']*1e3:.0f}ms, "
+              f"slo_attainment {tm['slo_attainment']:.2f}, "
+              f"preemptions {tm['preemptions']}")
+    if slo is not None:
+        print(f"[serve] slo: goodput {m['goodput_rps']:.1f} req/s "
+              f"({m['goodput_tok_per_s']:.1f} tok/s), "
+              f"preemptions {m['preemptions']}, restores {m['restores']}, "
+              f"parked peak {m['parked_bytes_peak']/1e6:.2f} MB")
+    if "prefix_cache" in m:
+        pc = m["prefix_cache"]
+        print(f"[serve] prefix cache: {pc['entries']} entries, "
+              f"hit_rate {pc['hit_rate']:.2f}, "
+              f"{pc['hit_tokens']} prefill tokens skipped")
     return 0
 
 
@@ -174,6 +212,18 @@ def main() -> int:
                     help="scheduler mode: number of requests")
     ap.add_argument("--tasks", type=int, default=2,
                     help="scheduler mode: number of gating tasks")
+    ap.add_argument("--slo", action="store_true",
+                    help="scheduler mode: SLO-aware tiered admission — "
+                         "interactive-first, batch-slot preemption with "
+                         "KV park/restore, chunked-prefill interleave")
+    ap.add_argument("--trace", default=None, choices=["bursty", "steady"],
+                    help="scheduler mode: drive arrivals from a seeded "
+                         "multi-tenant traffic trace instead of the "
+                         "synthetic uniform workload")
+    ap.add_argument("--prefix-cache", type=int, default=0,
+                    help="scheduler mode: cache up to N prompt prefill "
+                         "states in a radix trie; admissions skip their "
+                         "longest cached prefix (attention archs only)")
     ap.add_argument("--resident-fraction", type=float, default=0.5,
                     help="vision scheduler: fraction of experts resident")
     ap.add_argument("--async-paging", action="store_true",
@@ -232,7 +282,8 @@ def main() -> int:
     scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
                        eos_id=args.eos_id, seed=args.seed,
                        prefill_chunk=args.prefill_chunk, policy=policy,
-                       kv_quant=kv_quant, async_paging=args.async_paging)
+                       kv_quant=kv_quant, async_paging=args.async_paging,
+                       prefix_cache=args.prefix_cache)
 
     if args.scheduler and cfg.family == "vit-moe":
         if policy is not None:

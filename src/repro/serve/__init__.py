@@ -2,6 +2,8 @@ from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.expert_cache import (ExpertCache, ExpertUsage, PagedMoE,
                                       ShardedExpertCache)
 from repro.serve.scheduler import LMBackend, Request, Scheduler
+from repro.serve.slo import (RadixPrefixCache, SLOPolicy, SlotParker,
+                             TierSpec, TraceConfig, TraceGenerator)
 from repro.serve.transfer import (FakeTransferEngine, TransferEngine,
                                   TransferTimeout)
 
@@ -9,5 +11,7 @@ __all__ = [
     "ServeConfig", "ServingEngine",
     "ExpertCache", "ExpertUsage", "PagedMoE", "ShardedExpertCache",
     "LMBackend", "Request", "Scheduler",
+    "RadixPrefixCache", "SLOPolicy", "SlotParker", "TierSpec",
+    "TraceConfig", "TraceGenerator",
     "FakeTransferEngine", "TransferEngine", "TransferTimeout",
 ]

@@ -168,6 +168,13 @@ class ServeConfig:
     # k+1 behind wave k) and fence only at the point of use.  Bit-exact
     # with synchronous paging; adds stall_s/overlap_ratio to cache stats.
     async_paging: bool = False
+    # shared prompt-prefix cache (scheduler LM backend): >0 attaches a
+    # radix trie of up to that many cached prompt prefill states; new
+    # admissions skip their longest cached prefix and prefill only the
+    # suffix.  Attention archs only (recurrent state has no truncation
+    # property); ignored by the static ServingEngine.
+    prefix_cache: int = 0
+    prefix_min: int = 8            # min matched tokens worth reusing
 
 
 def _policy_override(cfg: ArchConfig, scfg: ServeConfig) -> ArchConfig:

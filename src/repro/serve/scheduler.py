@@ -25,10 +25,30 @@ Continuous batching mechanics:
     ``ExpertUsage`` — the router statistics that drive expert-cache
     prefetch and make task-level sparsity observable.
 
+SLO-aware serving (``Scheduler(..., slo=SLOPolicy(...))``, the
+``repro.serve.slo`` subsystem):
+
+  * requests carry a *tier* (interactive vs batch) with TTFT/TPOT
+    deadlines; admission laps serve interactive queues first;
+  * a due interactive request with no free slot *preempts* a batch-tier
+    decode slot: its KV/recurrent state is parked bit-exactly (int8 KV
+    caches make parked bytes ~4× cheaper — ``slo/preempt.py``) and later
+    spliced back through the same fused admit-splice, continuing decode
+    token-identically;
+  * a radix prefix cache (``ServeConfig.prefix_cache`` > 0) seeds
+    admissions from cached shared-prompt prefill state, skipping the
+    matched tokens;
+  * long prompts admit in ``prefill_chunk``-token chunks interleaved
+    with decode steps (one chunk per step), so a long prefill no longer
+    head-of-line-blocks every decode slot;
+  * ``metrics()`` reports per-tier TTFT/TPOT percentiles, preemption
+    counts, and goodput-under-SLO alongside tok/s.
+
 ``Scheduler`` is backend-generic: ``LMBackend`` serves autoregressive
 decode; ``serve/vision.py`` provides a batched M³ViT backend so the paper's
 own semseg/depth model is served through the same queue and fairness
-machinery.
+machinery (vision "preemption" is a staged-batch bump — inference is
+stateless, so it is trivially result-identical).
 """
 
 from __future__ import annotations
@@ -48,6 +68,10 @@ from repro.models import model as M
 from repro.serve.engine import (ServeConfig, feedback_inputs, is_recurrent,
                                 shard_state, state_batch_axes)
 from repro.serve.expert_cache import ExpertUsage
+from repro.serve.slo.preempt import SlotParker
+from repro.serve.slo.prefix import RadixPrefixCache
+from repro.serve.slo.tiers import (SLOPolicy, goodput, is_preemptible,
+                                   meets_slo, request_tpot)
 
 __all__ = ["Request", "Scheduler", "LMBackend"]
 
@@ -60,24 +84,47 @@ class Request:
     max_new_tokens: int = 0         # LM: tokens to generate (>=1)
     arrival: float = 0.0
     eos_id: Optional[int] = None    # None => backend default
+    # SLO tier (see repro.serve.slo.tiers): deadlines are None until the
+    # trace/tier tags them; ``tier`` names the service class
+    tier: str = "interactive"
+    tenant: int = 0
+    ttft_slo_s: Optional[float] = None
+    tpot_slo_s: Optional[float] = None
     # filled in by the scheduler
     tokens: list = field(default_factory=list)
     result: Any = None              # vision: prediction array
     t_admit: Optional[float] = None
     t_first: Optional[float] = None
     t_done: Optional[float] = None
+    preemptions: int = 0            # times this request's slot was parked
+    prefix_hit_tokens: int = 0      # prefill tokens skipped via prefix cache
 
     @property
     def ttft(self) -> float:
-        return (self.t_first or 0.0) - self.arrival
+        """Arrival -> first token; nan until the first token exists (a
+        ``0 - arrival`` garbage value here used to poison percentiles)."""
+        if self.t_first is None:
+            return float("nan")
+        return self.t_first - self.arrival
 
     @property
     def latency(self) -> float:
-        return (self.t_done or 0.0) - self.arrival
+        if self.t_done is None:
+            return float("nan")
+        return self.t_done - self.arrival
+
+    @property
+    def tpot(self) -> float:
+        """Mean time per output token after the first (nan unfinished)."""
+        return request_tpot(self)
 
 
 def _pad_len(s0: int, bucket: int) -> int:
     return s0 if bucket <= 0 else -(-s0 // bucket) * bucket
+
+
+def _state_bytes(state) -> int:
+    return sum(int(l.nbytes) for l in jax.tree.leaves(state))
 
 
 class _StateSlots:
@@ -92,6 +139,19 @@ class _StateSlots:
 
     def __init__(self, cfg: ArchConfig, max_len: int):
         self._axes = state_batch_axes(cfg, max_len)
+
+
+@dataclass
+class _PrefillJob:
+    """An in-flight chunked admission: a reserved slot plus a batch-1
+    staging state advanced one ``prefill_chunk`` per decode step."""
+
+    req: Request
+    slot: int
+    small: Any          # batch-1 staging state
+    prompt: np.ndarray  # (1, S0[, d])
+    off: int            # next prefill position (prefix-matched tokens skip)
+    s0: int
 
 
 class LMBackend:
@@ -125,6 +185,15 @@ class LMBackend:
         self._slots_io = _StateSlots(cfg, scfg.max_len)
         self._prefill: dict[int, Any] = {}   # task -> jitted fused admit
         self._decode_fn = None               # one decode fn, tasks traced
+        self._staged: dict[int, tuple] = {}  # task -> (mid, finish) jits
+        self._parkers: dict[str, SlotParker] = {}
+        # shared prompt-prefix reuse needs the attention truncation
+        # property (stale rows masked by causal/cache_len); recurrent
+        # state is a running reduction, so no cache for those archs
+        self.prefix: Optional[RadixPrefixCache] = None
+        if scfg.prefix_cache > 0 and not self.recurrent:
+            self.prefix = RadixPrefixCache(
+                scfg.prefix_cache, min_match=max(1, scfg.prefix_min))
 
     # ----------------------------------------------------------- steps
 
@@ -155,6 +224,52 @@ class LMBackend:
             self._prefill[task_id] = jax.jit(admit, donate_argnums=(2,))
         return self._prefill[task_id]
 
+    def staged_steps(self, task_id: int):
+        """Jitted staged-admission steps, cached per task.
+
+        ``mid(params, toks, small, idx) -> small``           one chunk;
+        ``finish(params, toks, small, idx, last_rel, big, slot)
+              -> (first_tok, small_out, big_out)``  final chunk + splice.
+
+        Unlike the fused ``admit_step`` these run against an *explicit*
+        batch-1 staging state, which is what lets an admission (a) start
+        from a prefix-cache entry at offset ``idx`` and (b) advance one
+        chunk at a time between decode steps.  ``small`` is never donated
+        — a prefix-cache entry must survive being read — and
+        ``small_out`` is returned so the finished prompt can be inserted
+        into the cache.
+        """
+        if task_id not in self._staged:
+            cfg, rules = self.cfg, self.rules
+            axes = self._slots_io._axes
+
+            def mid(params, toks, small, idx):
+                with use_rules(rules):
+                    _, st, _ = M.forward(
+                        params, toks, cfg, state=small, cache_index=idx,
+                        task_id=task_id, return_state=True,
+                        logits_mode="last")
+                return st
+
+            def finish(params, toks, small, idx, last_rel, big, slot):
+                with use_rules(rules):
+                    logits, st, _ = M.forward(
+                        params, toks, cfg, state=small, cache_index=idx,
+                        task_id=task_id, return_state=True)
+                tok = jnp.argmax(jax.lax.dynamic_index_in_dim(
+                    logits, last_rel, axis=1, keepdims=False)[0], axis=-1)
+                leaves, treedef = jax.tree_util.tree_flatten(big)
+                small_leaves = jax.tree.leaves(st)
+                out = [jax.lax.dynamic_update_slice_in_dim(b, s, slot,
+                                                           axis=ax)
+                       for b, s, ax in zip(leaves, small_leaves, axes)]
+                return (tok.astype(jnp.int32), st,
+                        jax.tree_util.tree_unflatten(treedef, out))
+
+            self._staged[task_id] = (
+                jax.jit(mid), jax.jit(finish, donate_argnums=(5,)))
+        return self._staged[task_id]
+
     def decode_step(self):
         """One decode fn for every batch composition: the per-slot task ids
         are a traced (B,) operand, so mixing tasks never recompiles."""
@@ -181,6 +296,16 @@ class LMBackend:
             self._decode_fn = jax.jit(decode, donate_argnums=(2,))
         return self._decode_fn
 
+    def parker(self, compress: str = "none") -> SlotParker:
+        """Park/restore machinery for this backend's state layout (one
+        jit pair per compression mode, shared by every bucket)."""
+        if compress not in self._parkers:
+            shapes = jax.tree.leaves(jax.eval_shape(
+                lambda: M.init_state(self.cfg, 1, self.scfg.max_len)))
+            self._parkers[compress] = SlotParker(
+                self._slots_io._axes, shapes, compress)
+        return self._parkers[compress]
+
     def make_bucket(self, task_id: int, slots: int) -> "LMTaskBucket":
         return LMTaskBucket(self, task_id, slots)
 
@@ -204,8 +329,11 @@ class LMTaskBucket:
         self.last_tok = np.zeros((slots,), np.int32)
         self.task_slots = np.zeros((slots,), np.int32)
         self.reqs: list[Optional[Request]] = [None] * slots
+        self.jobs: list[_PrefillJob] = []   # in-flight chunked admissions
+        self.reserved: set[int] = set()     # slots held by jobs
         self.steps = 0               # decode steps executed
         self.slot_steps = 0          # decode slot-steps with a live request
+        self.prefill_chunks = 0      # interleaved chunk steps executed
 
     @property
     def active(self) -> int:
@@ -213,7 +341,8 @@ class LMTaskBucket:
 
     @property
     def free_slots(self) -> list[int]:
-        return [i for i, r in enumerate(self.reqs) if r is None]
+        return [i for i, r in enumerate(self.reqs)
+                if r is None and i not in self.reserved]
 
     def _eos(self, req: Request) -> int:
         return self.backend.scfg.eos_id if req.eos_id is None else req.eos_id
@@ -228,8 +357,39 @@ class LMTaskBucket:
         return (eos >= 0 and tok == eos) \
             or len(req.tokens) >= req.max_new_tokens
 
-    def admit(self, req: Request, now: float) -> list[Request]:
-        """Prefill ``req`` alone and splice it into a free slot."""
+    # ------------------------------------------------------- admission
+
+    def _activate(self, req: Request, slot: int, tok: int, s0: int,
+                  now: float) -> list[Request]:
+        """Common admission tail: wire the slot and emit the first token."""
+        self.cache_pos[slot] = s0
+        self.last_tok[slot] = tok
+        self.task_slots[slot] = req.task_id
+        self.reqs[slot] = req
+        if self._emit(req, tok, now):
+            req.t_done = now
+            self.reqs[slot] = None
+            self.cache_pos[slot] = 0
+            self.last_tok[slot] = 0
+            return [req]
+        return []
+
+    def admit(self, req: Request, now: float,
+              chunk_interleave: bool = False) -> list[Request]:
+        """Prefill ``req`` and splice it into a free slot.
+
+        Three admission paths, cheapest applicable wins:
+          * fused one-shot (no prefix cache): batch-1 prefill against an
+            in-graph zero state, one jitted call;
+          * staged one-shot: explicit staging state — seeded from the
+            radix prefix cache when the prompt shares a cached prefix
+            (only the suffix is prefilled, at ``cache_index = L``) and
+            inserted back into the cache afterwards;
+          * chunked job (``chunk_interleave``): the slot is reserved and
+            the prompt advances one ``prefill_chunk`` per decode step
+            (``advance_prefill``), so long prompts stop head-of-line-
+            blocking the decode batch.
+        """
         b = self.backend
         slot = self.free_slots[0]
         prompt = np.asarray(req.prompt)[None]        # (1, S0[, d])
@@ -243,30 +403,155 @@ class LMTaskBucket:
             raise ValueError(
                 f"request {req.rid}: prompt {s0} + {req.max_new_tokens} "
                 f"new tokens does not fit max_len {b.scfg.max_len}")
-        if padded != s0:
-            pad = np.zeros((1, padded - s0) + prompt.shape[2:], prompt.dtype)
-            prompt = np.concatenate([prompt, pad], axis=1)
-        tok, self.state = b.admit_step(req.task_id)(
-            b.params, jnp.asarray(prompt), self.state, slot,
-            jnp.int32(s0 - 1))
-        tok = int(np.asarray(tok))
+
+        # shared-prefix lookup (token prompts on attention archs only)
+        entry, matched = None, 0
+        if b.prefix is not None and prompt.ndim == 2:
+            entry, matched = b.prefix.lookup(prompt[0])
+            matched = min(matched, s0 - 1)   # always prefill >= 1 token
+            if entry is None or matched < b.prefix.min_match:
+                entry, matched = None, 0
+
+        chunk = b.scfg.prefill_chunk
+        suffix_len = s0 - matched
+        # chunking only pays while there are active decoders to protect:
+        # on an idle batch a one-shot prefill blocks nobody and is far
+        # cheaper than a chunk-per-step dispatch train
+        if (chunk_interleave and self.active > 0 and chunk > 0
+                and suffix_len > chunk and not b.recurrent
+                and matched + _pad_len(suffix_len, chunk) <= b.scfg.max_len):
+            small = entry if entry is not None \
+                else M.init_state(b.cfg, 1, b.scfg.max_len)
+            self.jobs.append(_PrefillJob(req=req, slot=slot, small=small,
+                                         prompt=prompt, off=matched, s0=s0))
+            self.reserved.add(slot)
+            req.t_admit = now
+            req.prefix_hit_tokens = matched
+            return []
+
         req.t_admit = now
-        self.cache_pos[slot] = s0
-        self.last_tok[slot] = tok
+        if b.prefix is None or prompt.ndim != 2:
+            # legacy fused path (also serves embedding prompts)
+            if padded != s0:
+                pad = np.zeros((1, padded - s0) + prompt.shape[2:],
+                               prompt.dtype)
+                prompt = np.concatenate([prompt, pad], axis=1)
+            tok, self.state = b.admit_step(req.task_id)(
+                b.params, jnp.asarray(prompt), self.state, slot,
+                jnp.int32(s0 - 1))
+            return self._activate(req, slot, int(np.asarray(tok)), s0, now)
+        tok = self._admit_staged(req, slot, entry, matched, prompt)
+        return self._activate(req, slot, tok, s0, now)
+
+    def _admit_staged(self, req: Request, slot: int, entry, matched: int,
+                      prompt: np.ndarray) -> int:
+        """One-shot staged admission: suffix prefill at offset ``matched``
+        (0 with a fresh staging state on a prefix miss), splice, and
+        insert the finished prompt's state into the prefix cache."""
+        b = self.backend
+        s0 = prompt.shape[1]
+        if matched and matched + _pad_len(s0 - matched, b.prompt_pad) \
+                > b.scfg.max_len:
+            # padded suffix would write past the cache: drop the hit
+            # rather than let dynamic_update_slice clamp-shift the rows
+            entry, matched = None, 0
+        small = entry if entry is not None \
+            else M.init_state(b.cfg, 1, b.scfg.max_len)
+        suffix = prompt[:, matched:]
+        padded = _pad_len(suffix.shape[1], b.prompt_pad)
+        if padded != suffix.shape[1]:
+            pad = np.zeros((1, padded - suffix.shape[1]) + suffix.shape[2:],
+                           suffix.dtype)
+            suffix = np.concatenate([suffix, pad], axis=1)
+        _, finish = b.staged_steps(req.task_id)
+        tok, small_out, self.state = finish(
+            b.params, jnp.asarray(suffix), small, jnp.int32(matched),
+            jnp.int32(s0 - matched - 1), self.state, slot)
+        req.prefix_hit_tokens = matched
+        b.prefix.insert(prompt[0], small_out, _state_bytes(small_out))
+        return int(np.asarray(tok))
+
+    def advance_prefill(self, now_fn) -> list[Request]:
+        """Advance EVERY chunked admission by one chunk (called once per
+        decode step, the interleaving grain).  Jobs progress in parallel —
+        a reserved slot idles for ~(prompt/chunk) steps, not for the sum
+        of every queued prompt's chunks.  A job's final chunk fuses
+        first-token sampling with the slot splice, exactly like a one-shot
+        admission — token-identical either way."""
+        b = self.backend
+        finished: list[Request] = []
+        chunk = b.scfg.prefill_chunk
+        for job in list(self.jobs):
+            mid, finish = b.staged_steps(job.req.task_id)
+            remaining = job.s0 - job.off
+            self.prefill_chunks += 1
+            if remaining > chunk:
+                toks = jnp.asarray(job.prompt[:, job.off:job.off + chunk])
+                job.small = mid(b.params, toks, job.small,
+                                jnp.int32(job.off))
+                job.off += chunk
+                continue
+            tail = job.prompt[:, job.off:]
+            if remaining < chunk:   # pad final chunk to the compiled width
+                pad = np.zeros((1, chunk - remaining) + tail.shape[2:],
+                               tail.dtype)
+                tail = np.concatenate([tail, pad], axis=1)
+            tok, small_out, self.state = finish(
+                b.params, jnp.asarray(tail), job.small, jnp.int32(job.off),
+                jnp.int32(remaining - 1), self.state, job.slot)
+            if b.prefix is not None and job.prompt.ndim == 2:
+                b.prefix.insert(job.prompt[0], small_out,
+                                _state_bytes(small_out))
+            self.jobs.remove(job)
+            self.reserved.discard(job.slot)
+            finished.extend(self._activate(
+                job.req, job.slot, int(np.asarray(tok)), job.s0, now_fn()))
+        return finished
+
+    # ------------------------------------------------------ preemption
+
+    def pick_victim(self) -> Optional[int]:
+        """The preemption victim: the *youngest* preemptible (batch-tier)
+        slot — the least sunk decode work in the current burst."""
+        cands = [(r.t_admit or 0.0, i) for i, r in enumerate(self.reqs)
+                 if r is not None and is_preemptible(r)]
+        return max(cands)[1] if cands else None
+
+    def park(self, slot: int, parker: SlotParker) -> dict:
+        """Evict ``slot``: extract its state bit-exactly (optionally int8-
+        packed) and free the lane.  Returns the parked record."""
+        req = self.reqs[slot]
+        parked = {"req": req,
+                  "state": parker.park(self.state, slot),
+                  "cache_pos": int(self.cache_pos[slot]),
+                  "last_tok": int(self.last_tok[slot])}
+        req.preemptions += 1
+        self.reqs[slot] = None
+        self.cache_pos[slot] = 0
+        self.last_tok[slot] = 0
+        return parked
+
+    def restore(self, parked: dict, parker: SlotParker) -> int:
+        """Splice a parked record back into a free slot and resume decode
+        where it left off (same cache position, same feedback token)."""
+        slot = self.free_slots[0]
+        self.state = parker.restore(self.state, parked["state"], slot)
+        req = parked["req"]
+        self.cache_pos[slot] = parked["cache_pos"]
+        self.last_tok[slot] = parked["last_tok"]
         self.task_slots[slot] = req.task_id
         self.reqs[slot] = req
-        if self._emit(req, tok, now):
-            req.t_done = now
-            self.reqs[slot] = None
-            return [req]
-        return []
+        return slot
+
+    # ---------------------------------------------------------- decode
 
     def run_quantum(self, n: int, now_fn,
                     admit_cb=None) -> list[Request]:
         """Up to ``n`` decode steps over the whole bucket; returns finished
         requests (their slots are already freed).  ``admit_cb`` runs before
         every step so slots freed mid-quantum refill immediately — the
-        continuous part of continuous batching."""
+        continuous part of continuous batching.  In-flight chunked
+        admissions advance one chunk per step, interleaved with decode."""
         b = self.backend
         decode = b.decode_step()
         finished: list[Request] = []
@@ -274,6 +559,15 @@ class LMTaskBucket:
         for _ in range(n):
             if admit_cb is not None:
                 admit_cb()
+            if self.jobs:
+                finished.extend(self.advance_prefill(now_fn))
+                # no decodable slot -> no decode latency to protect:
+                # drain prefill chunks at full speed until a job
+                # activates (admissions stay live via admit_cb)
+                while self.active == 0 and self.jobs:
+                    if admit_cb is not None:
+                        admit_cb()
+                    finished.extend(self.advance_prefill(now_fn))
             if self.active == 0:
                 break
             tok, self.state, counts = decode(
@@ -313,6 +607,10 @@ class LMTaskBucket:
         return finished
 
 
+def _interactive(req: Request) -> bool:
+    return not is_preemptible(req)
+
+
 class Scheduler:
     """Task-fair continuous batching over a backend's buckets.
 
@@ -328,10 +626,17 @@ class Scheduler:
 
     Either way total batch capacity equals a static engine's batch of
     ``total_slots``.
+
+    ``slo`` (an :class:`repro.serve.slo.SLOPolicy`) turns on tiered
+    admission: interactive queues admit first (still round-robin across
+    tasks within a tier), due interactive requests preempt batch-tier
+    decode slots (KV park/restore — bit-exact), parked requests restore
+    FIFO once the burst passes, and long prompts admit chunk-interleaved.
     """
 
     def __init__(self, backend, total_slots: int = 8, quantum: int = 4,
-                 num_tasks: Optional[int] = None, clock=None):
+                 num_tasks: Optional[int] = None, clock=None,
+                 slo: Optional[SLOPolicy] = None):
         self.backend = backend
         self.num_tasks = num_tasks or getattr(backend, "num_tasks", 1)
         self.mixed = getattr(backend, "bucketing", "per_task") == "mixed"
@@ -339,12 +644,20 @@ class Scheduler:
             else max(1, total_slots // self.num_tasks)
         self.quantum = quantum
         self.clock = clock or time.perf_counter
+        self.slo = slo
         self.buckets: dict[Any, Any] = {}
         self.queues: dict[int, deque] = {}
         self.rotation: list[int] = []
         self._rr = 0
         self.finished: list[Request] = []
         self._t0: Optional[float] = None
+        # SLO machinery
+        self.parked: deque = deque()
+        self.preemptions = 0
+        self.restores = 0
+        self.parked_bytes = 0
+        self.parked_bytes_peak = 0
+        self._parker: Optional[SlotParker] = None
 
     def now(self) -> float:
         if self._t0 is None:
@@ -365,7 +678,8 @@ class Scheduler:
 
     def _runnable(self, task_id: int, now: float) -> bool:
         q = self.queues.get(task_id)
-        queued = bool(q) and q[0].arrival <= now
+        queued = bool(q) and (q[0].arrival <= now if self.slo is None
+                              else any(r.arrival <= now for r in q))
         bucket = self.buckets.get(task_id)
         return queued or (bucket is not None and bucket.active > 0)
 
@@ -380,9 +694,35 @@ class Scheduler:
         return None
 
     def pending(self) -> bool:
+        if self.parked:
+            return True
         if any(self.queues.get(t) for t in self.rotation):
             return True
-        return any(b.active > 0 for b in self.buckets.values())
+        return any(b.active > 0 or getattr(b, "jobs", None)
+                   for b in self.buckets.values())
+
+    # ------------------------------------------------------- admission
+
+    def _pop_due(self, task: int, now: float, pred=None):
+        """Pop the first due request in ``task``'s queue matching ``pred``
+        (SLO mode scans past not-yet-due heads; legacy admission is
+        strictly head-of-queue and does not use this)."""
+        q = self.queues.get(task)
+        if not q:
+            return None
+        for i, r in enumerate(q):
+            if r.arrival <= now and (pred is None or pred(r)):
+                del q[i]
+                return r
+        return None
+
+    def _due_any(self, now: float, pred) -> bool:
+        return any(r.arrival <= now and pred(r)
+                   for q in self.queues.values() for r in q)
+
+    def _task_due(self, task: int, now: float, pred) -> bool:
+        return any(r.arrival <= now and pred(r)
+                   for r in self.queues.get(task, ()))
 
     def _admit_mixed(self, bucket) -> bool:
         """Offer freed slots round-robin across task queues (one request per
@@ -404,20 +744,99 @@ class Scheduler:
                     break
         return admitted
 
+    def _admit_lap(self, bucket, pred, limit: Optional[int] = None) -> bool:
+        """Round-robin admission laps restricted to ``pred`` requests —
+        the SLO-mode analogue of ``_admit_mixed`` (task fairness holds
+        *within* each tier)."""
+        interleave = bool(self.slo and self.slo.chunk_interleave)
+        admitted = 0
+        progress = True
+        while bucket.free_slots and progress and self.rotation:
+            progress = False
+            for off in range(len(self.rotation)):
+                if not bucket.free_slots:
+                    break
+                t = self.rotation[(self._rr + off) % len(self.rotation)]
+                r = self._pop_due(t, self.now(), pred)
+                if r is not None:
+                    self.finished.extend(bucket.admit(
+                        r, self.now(), chunk_interleave=interleave))
+                    self._rr = (self._rr + off + 1) % len(self.rotation)
+                    admitted += 1
+                    progress = True
+                    if limit is not None and admitted >= limit:
+                        return True
+                    break
+        return admitted > 0
+
+    def _get_parker(self) -> Optional[SlotParker]:
+        if self._parker is None:
+            mk = getattr(self.backend, "parker", None)
+            if mk is not None:
+                self._parker = mk(self.slo.park_compress)
+        return self._parker
+
+    def _park_victim(self, bucket) -> bool:
+        victim = bucket.pick_victim()
+        if victim is None:
+            return False
+        parked = bucket.park(victim, self._parker)
+        self.parked.append(parked)
+        self.preemptions += 1
+        self.parked_bytes += parked["state"].nbytes
+        self.parked_bytes_peak = max(self.parked_bytes_peak,
+                                     self.parked_bytes)
+        return True
+
+    def _admit_slo(self, bucket) -> bool:
+        """Tiered admission: interactive first, then preemption for the
+        still-waiting interactive, then FIFO restores of parked requests,
+        then batch admission into whatever capacity remains."""
+        admitted = self._admit_lap(bucket, _interactive)
+        if self.slo.preemption and self._get_parker() is not None:
+            while (not bucket.free_slots
+                   and len(self.parked) < self.slo.max_parked
+                   and self._due_any(self.now(), _interactive)):
+                if not self._park_victim(bucket):
+                    break
+                admitted |= self._admit_lap(bucket, _interactive, limit=1)
+        while (bucket.free_slots and self.parked
+               and not self._due_any(self.now(), _interactive)):
+            parked = self.parked.popleft()
+            bucket.restore(parked, self._get_parker())
+            self.parked_bytes -= parked["state"].nbytes
+            self.restores += 1
+            admitted = True
+        admitted |= self._admit_lap(bucket, is_preemptible)
+        return admitted
+
+    # ------------------------------------------------------------ step
+
     def step(self) -> bool:
         """One scheduling quantum.  Returns False when nothing was runnable
         (e.g. every remaining arrival is in the future)."""
         now = self.now()
         if self.mixed:
             bucket = self._bucket(None)
-            admitted = self._admit_mixed(bucket)
-            if bucket.active == 0 and not admitted:
+            admit = self._admit_slo if self.slo is not None \
+                else self._admit_mixed
+            admitted = admit(bucket)
+            if bucket.active == 0 and not admitted and not bucket.jobs:
                 return False
             self.finished.extend(bucket.run_quantum(
                 self.quantum, self.now,
-                admit_cb=lambda: self._admit_mixed(bucket)))
+                admit_cb=lambda: admit(bucket)))
             return True
-        for off in range(len(self.rotation)):
+        # per-task buckets: with an SLO policy, tasks holding a due
+        # interactive request take the quantum first
+        offsets = list(range(len(self.rotation)))
+        if self.slo is not None:
+            urgent = [o for o in offsets if self._task_due(
+                self.rotation[(self._rr + o) % len(self.rotation)],
+                now, _interactive)]
+            rest = [o for o in offsets if o not in urgent]
+            offsets = urgent + rest
+        for off in offsets:
             task = self.rotation[(self._rr + off) % len(self.rotation)]
             if self._runnable(task, now):
                 self._rr = (self._rr + off + 1) % len(self.rotation)
@@ -425,10 +844,36 @@ class Scheduler:
                 q = self.queues[task]
 
                 def admit():
-                    while bucket.free_slots and q \
-                            and q[0].arrival <= self.now():
-                        done = bucket.admit(q.popleft(), self.now())
-                        self.finished.extend(done)
+                    if self.slo is None:
+                        while bucket.free_slots and q \
+                                and q[0].arrival <= self.now():
+                            done = bucket.admit(q.popleft(), self.now())
+                            self.finished.extend(done)
+                        return
+                    # tiered: interactive first, then batch
+                    while bucket.free_slots:
+                        r = self._pop_due(task, self.now(), _interactive) \
+                            or self._pop_due(task, self.now(),
+                                             is_preemptible)
+                        if r is None:
+                            break
+                        self.finished.extend(bucket.admit(r, self.now()))
+                    # stateless "preemption": bump a staged batch-tier
+                    # request back to the queue to seat a due interactive
+                    bump = getattr(bucket, "bump_batch", None)
+                    if bump is None or not self.slo.preemption:
+                        return
+                    while not bucket.free_slots and self._task_due(
+                            task, self.now(), _interactive):
+                        bumped = bump()
+                        if bumped is None:
+                            break
+                        self.queues[task].appendleft(bumped)
+                        self.preemptions += 1
+                        r = self._pop_due(task, self.now(), _interactive)
+                        if r is None:
+                            break
+                        self.finished.extend(bucket.admit(r, self.now()))
 
                 admit()
                 # router lookahead across buckets: submit the NEXT task's
@@ -466,22 +911,63 @@ class Scheduler:
         items = len(done)
         span = max((r.t_done for r in done), default=0.0) - \
             min((r.arrival for r in done), default=0.0)
-        lat = np.array([r.latency for r in done]) if done else np.zeros(1)
-        ttft = np.array([r.ttft for r in done if r.t_first is not None])
+        # unfinished requests report nan ttft/latency — filter, and guard
+        # every percentile against an empty sample (an empty ``done`` used
+        # to crash here; a half-finished one used to skew the tail)
+        lat = np.array([r.latency for r in done], np.float64)
+        lat = lat[np.isfinite(lat)]
+        ttft = np.array([r.ttft for r in done], np.float64)
+        ttft = ttft[np.isfinite(ttft)]
+
+        def pct(a, p):
+            return float(np.percentile(a, p)) if a.size else 0.0
+
         out: dict[str, Any] = {
             "requests": items,
             "tokens": toks,
             "span_s": span,
             "tok_per_s": toks / span if span > 0 else 0.0,
             "items_per_s": items / span if span > 0 else 0.0,
-            "latency_p50_s": float(np.percentile(lat, 50)),
-            "latency_p99_s": float(np.percentile(lat, 99)),
-            "ttft_p50_s": float(np.percentile(ttft, 50)) if ttft.size else 0.0,
+            "latency_p50_s": pct(lat, 50),
+            "latency_p99_s": pct(lat, 99),
+            "ttft_p50_s": pct(ttft, 50),
+            "ttft_p99_s": pct(ttft, 99),
             "per_task": {
                 t: sum(1 for r in done if r.task_id == t)
                 for t in self.rotation
             },
         }
+        # goodput-under-SLO + per-tier tails (requests without deadlines
+        # count as met, so these reduce to throughput when SLOs are unset)
+        out.update(goodput(done, span))
+        tiers: dict[str, Any] = {}
+        for name in sorted({r.tier for r in done}):
+            rs = [r for r in done if r.tier == name]
+            tt = np.array([r.ttft for r in rs], np.float64)
+            tt = tt[np.isfinite(tt)]
+            tp = np.array([request_tpot(r) for r in rs], np.float64)
+            tp = tp[np.isfinite(tp)]
+            tiers[name] = {
+                "requests": len(rs),
+                "ttft_p50_s": pct(tt, 50),
+                "ttft_p99_s": pct(tt, 99),
+                "tpot_p50_s": pct(tp, 50),
+                "slo_attainment": sum(meets_slo(r) for r in rs) / len(rs),
+                "preemptions": sum(r.preemptions for r in rs),
+            }
+        out["tiers"] = tiers
+        if self.slo is not None:
+            out["preemptions"] = self.preemptions
+            out["restores"] = self.restores
+            out["parked_now"] = len(self.parked)
+            out["parked_bytes_peak"] = self.parked_bytes_peak
+        prefix = getattr(self.backend, "prefix", None)
+        if prefix is not None:
+            out["prefix_cache"] = prefix.stats()
+        chunks = sum(getattr(b, "prefill_chunks", 0)
+                     for b in self.buckets.values())
+        if chunks:
+            out["prefill_chunks"] = chunks
         usage = getattr(self.backend, "usage", None)
         if usage is not None:
             out["expert_usage_task_overlap"] = usage.task_overlap()

@@ -1,0 +1,30 @@
+"""``repro.serve.slo`` — SLO-aware multi-tenant serving primitives.
+
+  * ``tiers``    — service classes (interactive/batch) with TTFT/TPOT
+                   deadlines, the ``SLOPolicy`` scheduler knob bundle,
+                   and goodput-under-SLO accounting;
+  * ``preempt``  — bit-exact decode-slot park/restore (int8-compressible
+                   parked KV via ``quant.quantize_kv``);
+  * ``prefix``   — radix-trie shared prompt-prefix cache seeding fused
+                   prefill admissions;
+  * ``trace``    — seeded heavy-tailed multi-tenant traffic traces
+                   (bursts, task-mix shifts, tenant skew).
+
+The scheduler integration lives in ``serve/scheduler.py`` (pass
+``Scheduler(..., slo=SLOPolicy(...))``); the benchmark in
+``benchmarks/serve_slo.py``.
+"""
+
+from repro.serve.slo.preempt import ParkedState, SlotParker
+from repro.serve.slo.prefix import RadixPrefixCache
+from repro.serve.slo.tiers import (BATCH, INTERACTIVE, SLOPolicy, TIERS,
+                                   TierSpec, goodput, is_preemptible,
+                                   meets_slo, request_tpot, tag_request)
+from repro.serve.slo.trace import TickClock, TraceConfig, TraceGenerator
+
+__all__ = [
+    "ParkedState", "SlotParker", "RadixPrefixCache",
+    "BATCH", "INTERACTIVE", "SLOPolicy", "TIERS", "TierSpec",
+    "goodput", "is_preemptible", "meets_slo", "request_tpot",
+    "tag_request", "TickClock", "TraceConfig", "TraceGenerator",
+]

@@ -31,6 +31,7 @@ from repro.models import vit as V
 from repro.ops.policy import use_policy
 from repro.serve.expert_cache import PagedMoE
 from repro.serve.scheduler import Request
+from repro.serve.slo.tiers import is_preemptible
 from repro.serve.transfer import TransferEngine
 
 __all__ = ["M3ViTServer", "VisionBackend"]
@@ -238,6 +239,19 @@ class VisionTaskBucket:
         req.t_admit = now
         self.staged.append(req)
         return []
+
+    def bump_batch(self) -> Optional[Request]:
+        """SLO preemption hook: displace the most recently staged batch-tier
+        request so a due interactive one can take its place in the next
+        forward.  Vision inference is stateless (one batched forward per
+        request), so a bump is trivially result-identical — the request
+        just rides a later batch."""
+        for i in range(len(self.staged) - 1, -1, -1):
+            if is_preemptible(self.staged[i]):
+                req = self.staged.pop(i)
+                req.preemptions += 1
+                return req
+        return None
 
     def run_quantum(self, n: int, now_fn, admit_cb=None) -> list[Request]:
         if admit_cb is not None:

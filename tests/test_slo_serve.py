@@ -1,0 +1,264 @@
+"""SLO-aware serving (repro.serve.slo + scheduler integration).
+
+The acceptance surface of the slo subsystem:
+
+  * preemption round trip is TOKEN-IDENTICAL: a batch-tier request whose
+    decode slot is parked (KV + state extracted) and later restored emits
+    exactly the tokens of an uninterrupted run — fp32 caches, int8 KV
+    caches (parked verbatim), and recurrent state alike;
+  * the parker's extract/splice is bit-exact at the leaf level, and
+    ``compress="int8"`` buys a real byte reduction on fp caches;
+  * chunked-prefill interleaving changes WHEN prefill work happens, never
+    what it computes — and short requests finish while a long prompt is
+    still prefilling;
+  * the vision backend's stateless "preemption" (staged-batch bump) is
+    result-identical and counted;
+  * the ``Request.ttft``/``latency`` nan semantics and the empty-metrics
+    guard (both previously garbage/crash paths).
+
+Scheduling tests drive a fake tick clock — arrivals are in tick units, so
+preemption timing is deterministic, never wall-clock dependent.
+"""
+
+import math
+from dataclasses import replace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model as M
+from repro.serve import (LMBackend, Request, Scheduler, ServeConfig,
+                         ServingEngine)
+from repro.serve.slo import SLOPolicy, TickClock
+
+
+@pytest.fixture(scope="module")
+def llama():
+    cfg = configs.get("llama3_2_1b", smoke=True)
+    return cfg, M.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompts(cfg, n, s, seed=3):
+    return np.asarray(jax.random.randint(
+        jax.random.PRNGKey(seed), (n, s), 0, cfg.vocab_size), np.int32)
+
+
+def _preempt_roundtrip(cfg, params, scfg, park_compress):
+    """One slot, a long batch request, an interactive arrival mid-decode:
+    the batch request must be parked, the interactive served, the batch
+    restored — and BOTH token streams must equal the static engine's."""
+    prompts = _prompts(cfg, 2, 8)
+    ref = np.asarray(ServingEngine(cfg, params, scfg).generate(
+        jnp.asarray(prompts), 24))
+    backend = LMBackend(cfg, params, scfg)
+    sched = Scheduler(backend, total_slots=1, quantum=4, num_tasks=1,
+                      clock=TickClock(),
+                      slo=SLOPolicy(preemption=True, chunk_interleave=False,
+                                    park_compress=park_compress))
+    batch_req = Request(rid=0, task_id=0, prompt=prompts[0],
+                        max_new_tokens=24, arrival=0.0, tier="batch")
+    inter_req = Request(rid=1, task_id=0, prompt=prompts[1],
+                        max_new_tokens=4, arrival=0.25, tier="interactive")
+    done = {r.rid: r for r in sched.run([batch_req, inter_req])}
+    assert len(done) == 2
+    assert done[0].tokens == list(ref[0][:24])
+    assert done[1].tokens == list(ref[1][:4])
+    assert done[0].preemptions >= 1
+    assert sched.preemptions >= 1 and sched.restores >= 1
+    return sched
+
+
+def test_preempt_restore_token_identical_fp32(llama):
+    cfg, params = llama
+    sched = _preempt_roundtrip(cfg, params, ServeConfig(max_len=64), "none")
+    m = sched.metrics()
+    assert m["preemptions"] >= 1 and m["restores"] >= 1
+    assert m["parked_bytes_peak"] > 0 and m["parked_now"] == 0
+    assert set(m["tiers"]) == {"batch", "interactive"}
+    assert m["tiers"]["batch"]["preemptions"] >= 1
+    assert m["goodput_rps"] > 0 and m["slo_attainment"] == 1.0
+
+
+def test_preempt_restore_token_identical_int8_kv(llama):
+    """With an int8 KV cache the parked leaves are already int8 (+ f32
+    row scales below the packing threshold), so ``park_compress="int8"``
+    stores them verbatim and the round trip stays bit-exact."""
+    from repro.ops import policy_named
+
+    cfg, params = llama
+    scfg = ServeConfig(max_len=64, kv_quant="int8",
+                       policy=policy_named("xla_int8"))
+    _preempt_roundtrip(cfg, params, scfg, "int8")
+
+
+def test_preempt_restore_token_identical_recurrent():
+    """Recurrent state (no KV cache, a running reduction) parks and
+    restores through the same structural axis machinery."""
+    cfg = configs.get("xlstm_350m", smoke=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    _preempt_roundtrip(cfg, params, ServeConfig(max_len=64), "none")
+
+
+def test_parker_leaf_bit_exact_roundtrip(llama):
+    """park -> restore into the same slot reproduces every state leaf
+    bit-for-bit (compress="none")."""
+    cfg, params = llama
+    backend = LMBackend(cfg, params, ServeConfig(max_len=64))
+    bucket = backend.make_bucket(None, 2)
+    req = Request(rid=0, task_id=0, prompt=_prompts(cfg, 1, 8)[0],
+                  max_new_tokens=8, tier="batch")
+    bucket.admit(req, 0.0)
+    bucket.run_quantum(3, lambda: 0.0)
+    before = jax.tree.map(np.asarray, bucket.state)
+    parker = backend.parker("none")
+    parked = bucket.park(0, parker)
+    assert parked["cache_pos"] == 8 + 3   # prompt + decode steps taken
+    bucket.restore(parked, parker)
+    after = jax.tree.map(np.asarray, bucket.state)
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+
+
+def test_int8_park_compresses_fp_state_and_decode_continues(llama):
+    """compress="int8" on a floating KV cache packs rows to int8 + f32
+    per-row scales: a real byte reduction (~1.6x on this arch's bf16
+    cache, ~3.5x on an fp32 one), and the (lossy) restore still decodes
+    the request to completion."""
+    cfg, params = llama
+    backend = LMBackend(cfg, params, ServeConfig(max_len=64))
+    bucket = backend.make_bucket(None, 1)
+    req = Request(rid=0, task_id=0, prompt=_prompts(cfg, 1, 8)[0],
+                  max_new_tokens=10, tier="batch")
+    bucket.admit(req, 0.0)
+    bucket.run_quantum(3, lambda: 0.0)
+    p_none = backend.parker("none").park(bucket.state, 0)
+    p_int8 = backend.parker("int8").park(bucket.state, 0)
+    # bf16 cache: int8 data + f32 per-row scales ~ 0.63x of 2-byte rows
+    assert p_int8.nbytes < 0.75 * p_none.nbytes, \
+        (p_int8.nbytes, p_none.nbytes)
+    parker = backend.parker("int8")
+    parked = bucket.park(0, parker)
+    bucket.restore(parked, parker)
+    done = []
+    for _ in range(20):
+        done += bucket.run_quantum(4, lambda: 0.0)
+        if done:
+            break
+    assert done and len(done[0].tokens) == 10
+
+
+def test_chunked_interleave_token_identical_and_non_blocking(llama):
+    """A 24-token prompt admitted at prefill_chunk=4 advances one chunk
+    per decode step: the short interactive request FINISHES before the
+    long prompt's first token (event-order proof of interleaving), and
+    both token streams equal the engine's."""
+    cfg, params = llama
+    scfg = ServeConfig(max_len=64, prefill_chunk=4)
+    long_p = _prompts(cfg, 1, 24, seed=5)[0]
+    short_p = _prompts(cfg, 1, 4, seed=6)[0]
+    eng = ServingEngine(cfg, params, scfg)
+    ref_long = np.asarray(eng.generate(jnp.asarray(long_p[None]), 6))[0]
+    ref_short = np.asarray(eng.generate(jnp.asarray(short_p[None]), 4))[0]
+    backend = LMBackend(cfg, params, scfg)
+    sched = Scheduler(backend, total_slots=2, quantum=4, num_tasks=1,
+                      clock=TickClock(),
+                      slo=SLOPolicy(preemption=False, chunk_interleave=True))
+    long_req = Request(rid=0, task_id=0, prompt=long_p,
+                       max_new_tokens=6, arrival=0.0, tier="batch")
+    short_req = Request(rid=1, task_id=0, prompt=short_p,
+                        max_new_tokens=4, arrival=0.0, tier="interactive")
+    done = {r.rid: r for r in sched.run([long_req, short_req])}
+    assert done[0].tokens == list(ref_long[:6])
+    assert done[1].tokens == list(ref_short[:4])
+    # the short request completed while the long prompt was still in
+    # chunked prefill — decode was never head-of-line blocked
+    assert done[1].t_done < done[0].t_first
+    assert sched.metrics()["prefill_chunks"] >= 6
+
+
+def test_vision_slo_bump_is_result_identical():
+    """Vision "preemption": a staged batch-tier request is bumped back to
+    the queue so a due interactive takes its batch seat.  Stateless
+    inference => identical predictions, just a later batch."""
+    from repro.configs import m3vit as MV
+    from repro.models import vit as V
+    from repro.serve.vision import VisionBackend
+
+    cfg = configs.get("m3vit", smoke=True)
+    params = V.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(0)
+    imgs = rng.standard_normal((3, MV.IMAGE_H, MV.IMAGE_W, 3)).astype(
+        np.float32)
+
+    def mk_reqs(t_interactive):
+        return [
+            Request(rid=0, task_id=0, prompt=imgs[0], arrival=0.0,
+                    tier="batch"),
+            Request(rid=1, task_id=1, prompt=imgs[1], arrival=0.0,
+                    tier="batch"),
+            Request(rid=2, task_id=0, prompt=imgs[2],
+                    arrival=t_interactive, tier="interactive"),
+        ]
+
+    backend = VisionBackend(cfg, params, resident_fraction=1.0)
+    ref = {r.rid: r for r in Scheduler(
+        backend, total_slots=2, quantum=1,
+        num_tasks=2).run(mk_reqs(0.0))}
+
+    class JumpClock:
+        t = 0.0
+
+        def __call__(self):
+            return self.t
+
+    clock = JumpClock()
+    # the cross-bucket lookahead hook runs between admission and the
+    # quantum — jump the clock there so the interactive request becomes
+    # due exactly while the batch request holds the only staged seat
+    backend.lookahead = lambda task: setattr(clock, "t", 20.0)
+    sched = Scheduler(backend, total_slots=2, quantum=1, num_tasks=2,
+                      clock=clock, slo=SLOPolicy(preemption=True))
+    done = {r.rid: r for r in sched.run(mk_reqs(10.0))}
+    assert len(done) == 3
+    assert sched.preemptions >= 1 and done[0].preemptions >= 1
+    # the interactive request rode the bumped request's batch seat
+    order = [r.rid for r in sched.finished]
+    assert order.index(2) < order.index(0)
+    for rid, r in done.items():
+        assert np.array_equal(np.asarray(r.result),
+                              np.asarray(ref[rid].result)), rid
+
+
+def test_ttft_latency_nan_until_finished():
+    """ttft/latency on an unstarted request are nan, not ``-arrival``
+    garbage (which used to poison percentile metrics)."""
+    r = Request(rid=0, task_id=0, prompt=np.zeros(4, np.int32),
+                max_new_tokens=2, arrival=5.0)
+    assert math.isnan(r.ttft) and math.isnan(r.latency)
+    assert math.isnan(r.tpot)
+    r.t_first = 5.5
+    assert r.ttft == pytest.approx(0.5) and math.isnan(r.latency)
+    r.t_done = 6.0
+    assert r.latency == pytest.approx(1.0)
+
+
+def test_metrics_empty_and_partial_no_crash(llama):
+    """metrics() on an empty scheduler (and with a ttft-less finished
+    request mixed in) returns zeros instead of crashing on an empty
+    percentile sample."""
+    cfg, params = llama
+    sched = Scheduler(LMBackend(cfg, params, ServeConfig(max_len=64)),
+                      total_slots=2, num_tasks=1)
+    m = sched.metrics()
+    assert m["requests"] == 0
+    assert m["latency_p50_s"] == 0.0 and m["ttft_p99_s"] == 0.0
+    weird = Request(rid=9, task_id=0, prompt=np.zeros(4, np.int32),
+                    max_new_tokens=1, arrival=0.0)
+    weird.t_done = 1.0          # finished but no recorded first token
+    sched.finished.append(weird)
+    m = sched.metrics()
+    assert m["requests"] == 1 and m["ttft_p50_s"] == 0.0
+    assert math.isfinite(m["latency_p50_s"])
