@@ -18,6 +18,12 @@
                        pallas-interpret), JSON artifact w/ dispatch report
   quant_memory       — int8/int4 expert-weight bytes, cosine vs fp32,
                        expert-cache hit rate at a fixed byte budget
+  factor_memory      — factored experts (shared basis + low-rank /
+                       butterfly deltas): reconstruction + forward
+                       fidelity vs compression, and equal-budget paged
+                       serving on a 256-expert multi-tenant M³ViT
+                       (resident count, hit rate, items/s vs dense),
+                       JSON acceptance artifact
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 Emits ``name,us_per_call,derived`` CSV.
@@ -31,7 +37,8 @@ from benchmarks.common import emit
 
 MODULES = ["table2_bandwidth", "table3_vit_latency", "table4_efficiency",
            "table5_ablation", "fig12_breakdown", "serve_throughput",
-           "serve_slo", "serve_dist", "ops_dispatch", "quant_memory"]
+           "serve_slo", "serve_dist", "ops_dispatch", "quant_memory",
+           "factor_memory"]
 
 
 def main() -> int:

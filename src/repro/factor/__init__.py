@@ -1,0 +1,23 @@
+"""``repro.factor`` — factored experts: shared basis + per-expert delta.
+
+Storage format (:class:`FactoredTensor`: dense shared basis + low-rank or
+Monarch-butterfly per-expert delta, optionally int8/int4-quantized) and the
+SVD-seeded offline converters (:func:`factorize` / :func:`factorize_tree`,
+accepting dense or QTensor checkpoints).  The compute side lives in
+``repro.ops.impls`` as the ``"xla_factored"`` registry implementations
+(one basis GEMM shared by the whole wave + per-expert delta correction),
+selected via ``ops.policy_named("xla_factored")``; the paging side in
+``serve/expert_cache.py``, which pins the basis on device and pages only
+the delta leaves — 10-100× more experts per byte of ``budget_bytes``.
+"""
+
+from repro.factor.factored import (FACTOR_PARAM_NAMES, FactoredTensor,
+                                   factored_linear, factored_moe_gemm,
+                                   factorize, factorize_tree, is_factored,
+                                   reconstruct, reconstruct_tree, split_dim)
+
+__all__ = [
+    "FACTOR_PARAM_NAMES", "FactoredTensor", "factored_linear",
+    "factored_moe_gemm", "factorize", "factorize_tree", "is_factored",
+    "reconstruct", "reconstruct_tree", "split_dim",
+]

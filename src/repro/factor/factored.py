@@ -1,0 +1,462 @@
+"""FactoredTensor: shared dense basis + tiny per-expert delta.
+
+PR 4's QTensors shrink the bytes an expert pages by ~4-8×; this module is
+the next order of magnitude (ROADMAP item 3, the ButterflyViT direction).
+The observation is structural: fine-tuned / per-task experts are small
+perturbations of a common function, so a bank of E expert weights
+``W_e (K, N)`` decomposes as
+
+    W_e  ≈  B  +  Δ_e
+
+where the **basis** ``B (K, N)`` is shared across every expert (device-
+resident ONCE, never paged) and the per-expert **delta** ``Δ_e`` is tiny:
+
+  * ``kind="rank"``       — ``Δ_e = U_e @ V_e`` with ``U_e (K, r)``,
+    ``V_e (r, N)``: ``r·(K+N)`` numbers instead of ``K·N`` (19× at M³ViT's
+    192×768 shapes with r=8).  Seeded by the truncated SVD of the residual
+    ``W_e − B`` — the optimal rank-r approximation in Frobenius norm.
+  * ``kind="butterfly"``  — a Monarch-style product of two block-diagonal
+    factors: with ``K = K1·K2`` and ``N = N1·N2``,
+    ``Δ_e[(k1,k2),(n1,n2)] = L_e[k1,k2,n2] · R_e[n2,k1,n1]`` —
+    ``K·N2 + N2·K1·N1`` numbers (~9× at M³ViT shapes), applied as two
+    small batched GEMMs (never materialized).  Seeded by the exact Monarch
+    projection: each ``(k1,n2)`` slice of the residual is a ``(K2, N1)``
+    matrix whose best product factor is its rank-1 SVD.
+
+Either delta composes with PR 4's quantization (CoQMoE-style co-design):
+``delta_bits=8/4`` stores ``U/V`` (or ``L/R``) as nested :class:`QTensor`
+children, so the paged bytes shrink multiplicatively and checkpoints name
+the leaves ``<param>.u.q`` / ``<param>.u.scale`` automatically.
+
+``FactoredTensor`` mirrors ``QTensor`` exactly: a registered
+pytree-with-keys (checkpoint leaves ``<param>.basis`` / ``.u`` / ``.v``),
+it flows through ``jax.jit``, vmap closures, ``device_put`` and
+``checkpoint.save/restore`` unchanged.  The compute side lives in
+``repro.ops.impls`` as the ``"xla_factored"`` impls (one basis GEMM shared
+by the whole wave + the per-expert delta correction); the paging side in
+``serve/expert_cache.py``, which pins the basis and pages only the delta
+leaves.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.quant import dequantize, is_qtensor, quantize
+
+__all__ = [
+    "FactoredTensor", "is_factored", "factorize", "reconstruct",
+    "factorize_tree", "reconstruct_tree", "factored_linear",
+    "factored_moe_gemm", "FACTOR_PARAM_NAMES", "split_dim",
+]
+
+_KINDS = ("rank", "butterfly")
+
+
+@jax.tree_util.register_pytree_with_keys_class
+class FactoredTensor:
+    """Shared basis + per-expert delta factors as one pytree leaf group.
+
+    ``basis`` (K, N) is the dense shared weight; ``u``/``v`` are the delta
+    factors — per-expert (leading E axis) or single (no E axis):
+
+      * ``kind="rank"``:      ``u (E?, K, r)``, ``v (E?, r, N)``
+      * ``kind="butterfly"``: ``u (E?, K1, K2, N2)``, ``v (E?, N2, K1, N1)``
+
+    ``u``/``v`` may be nested :class:`QTensor` children (int8/int4 delta
+    storage).  ``kind`` and the logical compute dtype string are static aux
+    data; everything shape-like is derived, so the same class serves jit
+    tracers and host arrays.
+    """
+
+    __slots__ = ("basis", "u", "v", "kind", "dtype")
+
+    def __init__(self, basis, u, v, *, kind: str = "rank",
+                 dtype: str = "float32"):
+        self.basis = basis
+        self.u = u
+        self.v = v
+        self.kind = str(kind)
+        self.dtype = str(dtype)
+
+    # ------------------------------------------------------------- pytree
+
+    def tree_flatten_with_keys(self):
+        return (((jax.tree_util.GetAttrKey("basis"), self.basis),
+                 (jax.tree_util.GetAttrKey("u"), self.u),
+                 (jax.tree_util.GetAttrKey("v"), self.v)),
+                (self.kind, self.dtype))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kind, dtype = aux
+        basis, u, v = children
+        return cls(basis, u, v, kind=kind, dtype=dtype)
+
+    # ------------------------------------------------------------ queries
+
+    @property
+    def experts(self) -> Optional[int]:
+        """Expert count (leading delta axis), or None for a single weight."""
+        per_expert_ndim = 2 if self.kind == "rank" else 3
+        u_shape = tuple(self.u.shape)   # QTensor.shape is the logical shape
+        return int(u_shape[0]) if len(u_shape) == per_expert_ndim + 1 \
+            else None
+
+    @property
+    def rank(self) -> int:
+        """Delta rank (``kind="rank"`` only; 0 = pure basis)."""
+        return int(tuple(self.u.shape)[-1]) if self.kind == "rank" else -1
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (reconstructed) shape: (E, K, N) or (K, N)."""
+        kn = tuple(self.basis.shape)
+        e = self.experts
+        return ((e,) + kn) if e is not None else kn
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def basis_nbytes(self) -> int:
+        """Bytes resident ONCE regardless of expert count (never paged)."""
+        return int(self.basis.nbytes)
+
+    @property
+    def delta_nbytes(self) -> int:
+        """Bytes that scale with E — the unit the expert cache pages."""
+        return int(self.u.nbytes) + int(self.v.nbytes)
+
+    @property
+    def nbytes(self) -> int:
+        return self.basis_nbytes + self.delta_nbytes
+
+    def __repr__(self) -> str:
+        return (f"FactoredTensor({self.kind}, shape={self.shape}, "
+                f"dtype={self.dtype}, basis={self.basis_nbytes}B, "
+                f"delta={self.delta_nbytes}B)")
+
+
+def is_factored(x: Any) -> bool:
+    return isinstance(x, FactoredTensor)
+
+
+# ------------------------------------------------------------------ helpers
+
+
+def split_dim(n: int) -> tuple[int, int]:
+    """Butterfly block split: the most-square factorization ``n = a·b``
+    with ``a <= b`` (a = largest divisor <= sqrt(n); a=1 for primes —
+    degenerate but valid)."""
+    n = int(n)
+    if n < 1:
+        raise ValueError(f"cannot split non-positive dim {n}")
+    a = 1
+    for d in range(int(np.sqrt(n)), 0, -1):
+        if n % d == 0:
+            a = d
+            break
+    return a, n // a
+
+
+def _check_finite(w, what: str) -> None:
+    if isinstance(w, jax.core.Tracer):
+        return
+    arr = np.asarray(w, np.float32)
+    if not np.isfinite(arr).all():
+        raise ValueError(
+            f"factorize: {what} contains NaN/Inf — a non-finite value "
+            "poisons the SVD seeding (every singular vector goes NaN) and "
+            "would silently zero the reconstruction; clean the weights "
+            "first")
+
+
+def _leaf_f(leaf, acc):
+    """Delta factor -> fp array in ``acc`` (dequantizes nested QTensors)."""
+    return dequantize(leaf, acc) if is_qtensor(leaf) else leaf.astype(acc)
+
+
+def _quantize_delta(leaf, bits: int):
+    """Quantize one delta factor; zero-size factors (rank 0) stay raw —
+    there is nothing to scale and an empty amax reduction is an error."""
+    if leaf.size == 0:
+        return leaf
+    return quantize(leaf, bits)
+
+
+# ---------------------------------------------------------------- factorize
+
+
+def _factorize_rank(resid: np.ndarray, rank: int):
+    """Truncated SVD of each expert's residual: the Frobenius-optimal
+    rank-r delta.  ``resid (E, K, N)`` -> ``u (E, K, r)``, ``v (E, r, N)``
+    with the singular values split evenly (``u·sqrt(s)``, ``sqrt(s)·v``)
+    so neither factor carries the full dynamic range."""
+    e, k, n = resid.shape
+    r = max(0, min(int(rank), k, n))
+    if r == 0:
+        return (np.zeros((e, k, 0), np.float32),
+                np.zeros((e, 0, n), np.float32))
+    uu, ss, vt = np.linalg.svd(resid.astype(np.float64),
+                               full_matrices=False)
+    sq = np.sqrt(ss[:, :r])
+    u = (uu[:, :, :r] * sq[:, None, :]).astype(np.float32)
+    v = (sq[:, :, None] * vt[:, :r, :]).astype(np.float32)
+    return u, v
+
+
+def _factorize_butterfly(resid: np.ndarray):
+    """Exact Monarch projection of each expert's residual.
+
+    Reshape ``(E, K, N) -> (E, K1, K2, N1, N2)``; every ``(k1, n2)`` slice
+    is a ``(K2, N1)`` matrix whose Monarch representation is the product of
+    one column of ``L`` and one row of ``R`` — i.e. a rank-1 factor.  Its
+    best rank-1 approximation is the leading SVD component, so the seeding
+    is optimal per slice (and EXACT when the residual is Monarch-
+    structured: a rank-1 matrix's top component reproduces it bit-for-bit
+    up to fp rounding)."""
+    e, k, n = resid.shape
+    k1, k2 = split_dim(k)
+    n1, n2 = split_dim(n)
+    # (E, K1, K2, N1, N2) -> slices (E, K1, N2, K2, N1)
+    m = resid.astype(np.float64).reshape(e, k1, k2, n1, n2)
+    m = m.transpose(0, 1, 4, 2, 3)
+    uu, ss, vt = np.linalg.svd(m, full_matrices=False)
+    s0 = np.sqrt(ss[..., 0])                           # (E, K1, N2)
+    left = uu[..., :, 0] * s0[..., None]               # (E, K1, N2, K2)
+    right = s0[..., None] * vt[..., 0, :]              # (E, K1, N2, N1)
+    l_fac = left.transpose(0, 1, 3, 2).astype(np.float32)   # (E,K1,K2,N2)
+    r_fac = right.transpose(0, 2, 1, 3).astype(np.float32)  # (E,N2,K1,N1)
+    return l_fac, r_fac
+
+
+def factorize(w, kind: str = "rank", *, rank: int = 8, basis=None,
+              delta_bits: Optional[int] = None,
+              dtype: Optional[str] = None) -> FactoredTensor:
+    """Offline converter: dense (or QTensor) expert weights -> shared basis
+    + SVD-seeded per-expert delta.
+
+    ``w``: ``(E, K, N)`` stacked expert weights (the usual case), or a
+    single ``(K, N)`` weight with an explicit ``basis`` to delta against.
+    ``basis`` defaults to the mean over experts — the centroid minimizes
+    the total residual energy the deltas must absorb.
+    ``rank``: delta rank for ``kind="rank"`` (0 = pure basis, exact only
+    when all experts equal the basis).  Ignored for butterfly.
+    ``delta_bits``: 8/4 stores the delta factors as nested QTensors.
+
+    Rejects non-finite inputs (offline converter semantics, like
+    ``quant.quantize``).
+    """
+    if kind not in _KINDS:
+        raise ValueError(f"kind must be one of {_KINDS}, got {kind!r}")
+    if int(rank) < 0:
+        raise ValueError(f"rank must be >= 0, got {rank}")
+    if is_qtensor(w):
+        w = dequantize(w)
+    if getattr(w, "ndim", 0) not in (2, 3):
+        raise ValueError(f"factorize expects (E, K, N) stacked experts or "
+                         f"a (K, N) weight, got shape "
+                         f"{getattr(w, 'shape', ())}")
+    _check_finite(w, "weights")
+    ldtype = dtype or str(jnp.asarray(w).dtype)
+    single = (w.ndim == 2)
+    wf = np.asarray(w, np.float32)
+    if single:
+        wf = wf[None]
+    if basis is None:
+        if single:
+            raise ValueError("factorize of a single (K, N) weight needs an "
+                             "explicit basis to delta against")
+        b = wf.mean(axis=0)
+    else:
+        if is_qtensor(basis):
+            basis = dequantize(basis)
+        _check_finite(basis, "basis")
+        b = np.asarray(basis, np.float32)
+        if b.shape != wf.shape[1:]:
+            raise ValueError(f"basis shape {b.shape} != weight shape "
+                             f"{wf.shape[1:]}")
+    resid = wf - b[None]
+    if kind == "rank":
+        u, v = _factorize_rank(resid, rank)
+    else:
+        u, v = _factorize_butterfly(resid)
+    if single:
+        u, v = u[0], v[0]
+    u, v = jnp.asarray(u), jnp.asarray(v)
+    if delta_bits is not None:
+        if delta_bits not in (8, 4):
+            raise ValueError(f"delta_bits must be 8 or 4, got {delta_bits}")
+        u = _quantize_delta(u, delta_bits)
+        v = _quantize_delta(v, delta_bits)
+    return FactoredTensor(jnp.asarray(b), u, v, kind=kind, dtype=ldtype)
+
+
+# -------------------------------------------------------------- reconstruct
+
+
+def _monarch_dense(l_fac, r_fac):
+    """(E?, K1, K2, N2) x (E?, N2, K1, N1) -> dense (E?, K, N):
+    ``W[(k1,k2),(n1,n2)] = L[k1,k2,n2] * R[n2,k1,n1]``."""
+    d = jnp.einsum("...akn,...nab->...akbn", l_fac, r_fac)
+    k = d.shape[-4] * d.shape[-3]
+    n = d.shape[-2] * d.shape[-1]
+    return d.reshape(d.shape[:-4] + (k, n))
+
+
+def reconstruct(ft: FactoredTensor, dtype=None) -> jax.Array:
+    """FactoredTensor -> dense ``(E, K, N)`` (or ``(K, N)``) array in
+    ``dtype`` (default: the logical dtype).  Lossy only through the
+    factorization itself — a rank-0 delta reconstructs the broadcast basis
+    exactly."""
+    acc = jnp.float32
+    b = ft.basis.astype(acc)
+    u, v = _leaf_f(ft.u, acc), _leaf_f(ft.v, acc)
+    if ft.kind == "rank":
+        delta = jnp.einsum("...kr,...rn->...kn", u, v)
+    else:
+        delta = _monarch_dense(u, v)
+    if ft.experts is not None:
+        b = b[None]
+    return (b + delta).astype(dtype or ft.dtype)
+
+
+# ------------------------------------------------------------ apply helpers
+#
+# The compute forms the "xla_factored" registry impls dispatch to.  The
+# basis GEMM contracts only the feature axis, so the per-element summation
+# order is independent of the leading expert/slot count — the property that
+# makes the paged waves bit-exact with the all-resident forward no matter
+# how many slot rows the cache rebuilt the FactoredTensor from.
+
+
+def factored_moe_gemm(buf, ft: FactoredTensor, acc) -> jax.Array:
+    """(E, C, K) x factored (E, K, N) -> (E, C, N) in ``acc``.
+
+    One shared basis GEMM serves the whole wave; the delta correction is
+    two skinny batched GEMMs.  int8 rank ``u`` keeps the per-channel
+    dequant-epilogue form (scale constant along the contraction axis);
+    ``v`` — and everything else — dequantizes before its GEMM (weights-only
+    compression: the memory multiplier is the point, the MACs stay fp).
+    ``v``'s epilogue would sit inside the final ``y + delta`` add, and XLA
+    contracts ``add(y, mul(dot, scale))`` into an FMA under jit — one
+    rounding instead of two — which would break the paged-vs-direct
+    bit-exactness contract (the paged wave runs jitted, the direct path
+    may not); the dequant-before-GEMM form ends on a dot, which never
+    FMA-fuses with the outer add."""
+    xb = buf.astype(acc)
+    y = jnp.einsum("ecd,df->ecf", xb, ft.basis.astype(acc),
+                   preferred_element_type=acc)
+    if ft.kind == "rank":
+        if ft.rank == 0:
+            return y
+        u, v = ft.u, ft.v
+        if is_qtensor(u) and u.bits == 8:
+            t = jnp.einsum("ecd,edr->ecr", xb, u.q.astype(acc),
+                           preferred_element_type=acc) * u.scale.astype(acc)
+        else:
+            t = jnp.einsum("ecd,edr->ecr", xb, _leaf_f(u, acc),
+                           preferred_element_type=acc)
+        return y + jnp.einsum("ecr,erf->ecf", t, _leaf_f(v, acc),
+                              preferred_element_type=acc)
+    l_fac, r_fac = _leaf_f(ft.u, acc), _leaf_f(ft.v, acc)
+    _, k1, k2, _ = l_fac.shape
+    xr = xb.reshape(xb.shape[:-1] + (k1, k2))
+    t = jnp.einsum("ecak,eakn->ecan", xr, l_fac,
+                   preferred_element_type=acc)
+    z = jnp.einsum("ecan,enab->ecbn", t, r_fac,
+                   preferred_element_type=acc)
+    return y + z.reshape(z.shape[:2] + (-1,))
+
+
+def factored_linear(x, ft: FactoredTensor, acc) -> jax.Array:
+    """(..., K) x factored single (K, N) -> (..., N) in ``acc``."""
+    xb = x.astype(acc)
+    y = jnp.matmul(xb, ft.basis.astype(acc), preferred_element_type=acc)
+    if ft.kind == "rank":
+        if ft.rank == 0:
+            return y
+        u, v = ft.u, ft.v
+        if is_qtensor(u) and u.bits == 8:
+            t = jnp.matmul(xb, u.q.astype(acc),
+                           preferred_element_type=acc) * u.scale.astype(acc)
+        else:
+            t = jnp.matmul(xb, _leaf_f(u, acc), preferred_element_type=acc)
+        # v dequantizes before its GEMM (see factored_moe_gemm: the
+        # epilogue form would FMA-fuse into the outer add under jit)
+        return y + jnp.matmul(t, _leaf_f(v, acc),
+                              preferred_element_type=acc)
+    l_fac, r_fac = _leaf_f(ft.u, acc), _leaf_f(ft.v, acc)
+    k1, k2, _ = l_fac.shape
+    xr = xb.reshape(xb.shape[:-1] + (k1, k2))
+    t = jnp.einsum("...ak,akn->...an", xr, l_fac,
+                   preferred_element_type=acc)
+    z = jnp.einsum("...an,nab->...bn", t, r_fac,
+                   preferred_element_type=acc)
+    return y + z.reshape(z.shape[:-2] + (-1,))
+
+
+# -------------------------------------------------------------------- trees
+
+# Per-expert stacked (leading E axis, ndim == 3) FFN weights — the set the
+# serving layer pages and therefore the set worth factoring.  Gates and
+# biases are absent: gates route (never paged per expert as weights worth
+# compressing) and biases are O(d) — paging them dense is cheaper than any
+# factor bookkeeping.
+FACTOR_PARAM_NAMES = frozenset({"wg", "wu", "wd", "w1", "w2"})
+
+
+def _factorable(name: str, leaf, names) -> bool:
+    if name not in names or is_factored(leaf):
+        return False
+    if is_qtensor(leaf):
+        return len(leaf.shape) == 3
+    return (isinstance(leaf, (np.ndarray, jax.Array))
+            and getattr(leaf, "ndim", 0) == 3
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
+
+
+def factorize_tree(tree, kind: str = "rank", *, rank: int = 8,
+                   delta_bits: Optional[int] = None,
+                   names=FACTOR_PARAM_NAMES):
+    """Offline converter: replace every stacked-expert weight leaf (dict
+    key in ``names``, ndim == 3, floating or QTensor, sitting NEXT TO a
+    ``"gate"`` sibling) with a :class:`FactoredTensor`.
+
+    The gate sibling is the structural marker of an expert dict — it is
+    what distinguishes a stacked-EXPERT ``(E, K, N)`` weight from a
+    layer-stacked dense-block ``(L, K, N)`` weight of the same name and
+    rank (shapes alone cannot: a ViT trunk's scanned dense MLPs look
+    exactly like an expert stack).  Averaging *layers* into a basis would
+    be semantically wrong, and per-layer slicing of a factored leaf would
+    shred the basis; routed experts always live beside their router, so
+    the sibling test is both necessary and cheap.  Everything else —
+    gates, biases, norms, dense-block MLPs, scanned LM stacks (ndim 4) —
+    passes through untouched."""
+    def walk(node):
+        if isinstance(node, dict):
+            is_expert_dict = "gate" in node
+            return {k: (factorize(v, kind, rank=rank, delta_bits=delta_bits)
+                        if is_expert_dict and _factorable(k, v, names)
+                        else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v) for v in node]
+        if isinstance(node, tuple):
+            return tuple(walk(v) for v in node)
+        return node
+    return walk(tree)
+
+
+def reconstruct_tree(tree):
+    """Inverse of :func:`factorize_tree` (lossy: returns the reconstructed
+    dense weights in their logical dtype)."""
+    return jax.tree.map(
+        lambda x: reconstruct(x) if is_factored(x) else x, tree,
+        is_leaf=is_factored)

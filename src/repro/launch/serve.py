@@ -20,6 +20,13 @@ Usage:
   # host (CPU) shards, same as dryrun / the dist tests:
   python -m repro.launch.serve --arch llama3_2_1b --smoke --mesh 2x2
   python -m repro.launch.serve --arch m3vit --smoke --scheduler --mesh 1x4
+  # factored experts: shared basis (pinned on device) + low-rank or
+  # butterfly per-expert deltas (paged) — 10-100x more experts per byte
+  # of --expert-budget-bytes; composes with --quant (int8 deltas):
+  python -m repro.launch.serve --arch m3vit_many --smoke --scheduler \
+      --factor rank:8 --expert-budget-bytes 2000000
+  python -m repro.launch.serve --arch m3vit --smoke --scheduler \
+      --factor butterfly --quant int8 --dispatch-report
   # SLO-aware serving: tiered admission + preemption (KV park/restore) +
   # chunked-prefill interleave, driven by a bursty multi-tenant trace,
   # with a shared prompt-prefix cache:
@@ -40,6 +47,44 @@ def _mesh_arg(argv) -> str | None:
         if a.startswith("--mesh="):
             return a.split("=", 1)[1]
     return None
+
+
+def _parse_factor(spec: str) -> tuple[str, int]:
+    """``rank:R`` -> ("rank", R); ``butterfly`` -> ("butterfly", 0)."""
+    s = spec.lower()
+    if s == "butterfly":
+        return "butterfly", 0
+    if s.startswith("rank:"):
+        try:
+            r = int(s.split(":", 1)[1])
+        except ValueError:
+            raise SystemExit(f"--factor rank:R needs an integer R, "
+                             f"got {spec!r}")
+        if r < 0:
+            raise SystemExit(f"--factor rank must be >= 0, got {r}")
+        return "rank", r
+    raise SystemExit(f"--factor expects rank:R or butterfly, got {spec!r}")
+
+
+def _factor_spec(args):
+    """``--factor``/``--quant`` -> the ``(kind, rank, delta_bits)`` triple
+    the backends and ``factor.factorize_tree`` consume (deltas quantize at
+    the precision ``--quant`` picks; the basis stays fp)."""
+    kind, rank = _parse_factor(args.factor)
+    return kind, rank, {"int8": 8, "int4": 4}.get(args.quant)
+
+
+def _factorize_params(params, args):
+    """Apply ``--factor`` to an LM params tree.  Only ndim-3 expert stacks
+    next to their router factor (``factorize_tree``'s gate-sibling rule);
+    scanned layer stacks (ndim 4) pass through unchanged — the vit-moe
+    serving path (per-layer factorization in ``M3ViTServer``) is the
+    primary target."""
+    from repro.factor import factorize_tree
+
+    kind, rank, delta_bits = _factor_spec(args)
+    return factorize_tree(params, kind=kind, rank=rank,
+                          delta_bits=delta_bits)
 
 
 def _parse_mesh(spec: str) -> tuple[int, int]:
@@ -162,11 +207,17 @@ def _serve_scheduler_vision(cfg, args, rules=None) -> int:
     if args.quant:
         from repro.quant import quantize_tree
         params = quantize_tree(params, bits=8 if args.quant == "int8" else 4)
+    # factorization happens per MoE layer inside the backend (after the
+    # per-layer slice: the stacked tree's ndim-4 expert leaves are not
+    # factorable, and each layer gets its own basis); quantized expert
+    # leaves re-factor there too — factorize accepts QTensor input
     backend = VisionBackend(cfg, params,
                             resident_fraction=args.resident_fraction,
                             expert_budget_bytes=args.expert_budget_bytes
                             or None,
-                            rules=rules, async_paging=args.async_paging)
+                            rules=rules, async_paging=args.async_paging,
+                            factor=_factor_spec(args) if args.factor
+                            else None)
     sched = Scheduler(backend, total_slots=args.batch, quantum=1,
                       num_tasks=len(MV.TASKS))
     imgs = np.asarray(jax.random.normal(
@@ -241,13 +292,21 @@ def main() -> int:
                          "budget (0 = use --resident-fraction); each mesh "
                          "model-shard holds its own budget's worth")
     ap.add_argument("--policy", default=None,
-                    choices=["xla", "blocked", "pallas", "ref", "xla_int8"],
+                    choices=["xla", "blocked", "pallas", "ref", "xla_int8",
+                             "xla_factored"],
                     help="compute policy for every serving step (default: "
                          "the arch config's policy)")
     ap.add_argument("--quant", default=None, choices=["int8", "int4"],
                     help="quantize the weight tree (QTensor leaves), store "
                          "the KV cache int8, and serve under the xla_int8 "
                          "policy unless --policy overrides it")
+    ap.add_argument("--factor", default=None, metavar="KIND",
+                    help="factor per-expert FFN weights into a shared basis "
+                         "+ per-expert delta ('rank:R' or 'butterfly') and "
+                         "serve the MoE GEMM under the xla_factored impl; "
+                         "the paged cache pins the basis and pages only the "
+                         "deltas.  Composes with --quant: deltas quantize "
+                         "at the same precision, the basis stays fp")
     ap.add_argument("--dispatch-report", action="store_true",
                     help="print ops.dispatch_report() after serving")
     args = ap.parse_args()
@@ -279,6 +338,12 @@ def main() -> int:
         # the quantized impls are dispatch HITS (check --dispatch-report)
         policy = policy or policy_named("xla_int8")
         kv_quant = "int8"
+    if args.factor:
+        # factored experts: the MoE GEMM must run the xla_factored impl on
+        # top of whatever quantization picked (dense blocks keep their
+        # policy; only moe_grouped_gemm is overridden)
+        policy = (policy or policy_named("xla_factored")).with_impls(
+            moe_grouped_gemm="xla_factored")
     scfg = ServeConfig(max_len=args.max_len, temperature=args.temperature,
                        eos_id=args.eos_id, seed=args.seed,
                        prefill_chunk=args.prefill_chunk, policy=policy,
@@ -297,6 +362,8 @@ def main() -> int:
     key = jax.random.PRNGKey(args.seed)
     k_params, k_prompts = jax.random.split(key)   # independent init/data
     params = M.init_params(k_params, cfg)
+    if args.factor:
+        params = _factorize_params(params, args)
     if args.quant:
         from repro.quant import quantize_tree
         params = quantize_tree(params, bits=8 if args.quant == "int8" else 4)

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import gelu as gelu_lib
+from repro.factor import factored_linear, factored_moe_gemm, is_factored
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.ops.registry import register
@@ -42,17 +43,21 @@ def _is_tracer(x) -> bool:
 
 
 def _floating(*arrays) -> bool:
-    return all(not is_qtensor(a)
+    return all(not is_qtensor(a) and not is_factored(a)
                and jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating)
                for a in arrays)
 
 
 def _reject_qtensor(*arrays):
-    """Reason string when any operand is quantized — the fp impls must
-    bounce QTensors to the ``xla_int8`` impls *loudly*, never crash on or
-    silently dequantize them."""
+    """Reason string when any operand is packed — the fp impls must bounce
+    QTensors to the ``xla_int8`` impls and FactoredTensors to the
+    ``xla_factored`` impls *loudly*, never crash on or silently expand
+    them."""
     if any(is_qtensor(a) for a in arrays):
         return "operand is quantized (QTensor) — served by the xla_int8 impl"
+    if any(is_factored(a) for a in arrays):
+        return "operand is factored (FactoredTensor) — served by the " \
+               "xla_factored impl"
     return None
 
 
@@ -360,6 +365,9 @@ def _linear_ref(policy, tiles, x, w, b=None, *, activation=None,
 
 def _linear_int8_requires(policy, x, w, b=None, *, activation=None,
                           preferred_dtype=None):
+    if is_factored(w):
+        return "weight is factored (FactoredTensor) — served by the " \
+               "xla_factored impl"
     if not is_qtensor(w):
         return "weight is not quantized (run quant.quantize_tree first)"
     if is_qtensor(x):
@@ -401,10 +409,43 @@ register("linear", "pallas", _linear_pallas,
 register("linear", "ref", _linear_ref,
          requires=_linear_fp_requires,
          doc="pure-jnp oracle (f32 accumulation)")
+def _linear_factored_requires(policy, x, w, b=None, *, activation=None,
+                              preferred_dtype=None):
+    if not is_factored(w):
+        return "weight is not factored (run factor.factorize_tree first)"
+    if w.experts is not None:
+        return "factored weight carries a per-expert axis (serve it " \
+               "through moe_grouped_gemm)"
+    if is_qtensor(x) or is_factored(x):
+        return "activations are packed (weights-only impl)"
+    if not _floating(x):
+        return f"non-float input dtype {jnp.asarray(x).dtype}"
+    if x.shape[-1] != w.shape[-2]:
+        return f"contraction mismatch {x.shape[-1]} vs {w.shape[-2]}"
+    return None
+
+
+def _linear_factored(policy, tiles, x, w, b=None, *, activation=None,
+                     preferred_dtype=None):
+    # shared basis GEMM + low-rank / butterfly delta correction; the delta
+    # factors may be nested QTensors (int8 keeps the per-channel dequant
+    # epilogue; int4 dequantizes before its skinny GEMM)
+    acc = _accum_dtype(policy, preferred_dtype)
+    y = factored_linear(x, w, acc)
+    if b is not None:
+        y = y + (b.astype(acc) if policy.bias_f32 else b.astype(y.dtype))
+    y = apply_activation(y, activation)
+    return y.astype(x.dtype)
+
+
 register("linear", "xla_int8", _linear_int8,
          requires=_linear_int8_requires,
          doc="QTensor weights: int8 per-channel dequant epilogue / int4 "
              "grouped dequant-then-GEMM; fp activations")
+register("linear", "xla_factored", _linear_factored,
+         requires=_linear_factored_requires,
+         doc="FactoredTensor weights (no expert axis): basis GEMM + "
+             "low-rank/butterfly delta correction; fp activations")
 
 
 # ========================================================== moe_grouped_gemm
@@ -450,6 +491,9 @@ def _moe_ref(policy, tiles, buf, w, group_sizes=None):
 
 
 def _moe_int8_requires(policy, buf, w, group_sizes=None):
+    if is_factored(w):
+        return "expert weights are factored (FactoredTensor) — served by " \
+               "the xla_factored impl"
     if not is_qtensor(w):
         return "expert weights are not quantized (run quant.quantize_tree " \
                "first)"
@@ -482,7 +526,38 @@ register("moe_grouped_gemm", "pallas", _moe_pallas,
 register("moe_grouped_gemm", "ref", _moe_ref,
          requires=_moe_fp_requires,
          doc="einsum oracle with empty-expert zeroing")
+def _moe_factored_requires(policy, buf, w, group_sizes=None):
+    if not is_factored(w):
+        return "expert weights are not factored (run " \
+               "factor.factorize_tree first)"
+    if w.experts is None:
+        return "factored weight has no expert axis (serve it through " \
+               "linear)"
+    if is_qtensor(buf) or is_factored(buf):
+        return "expert queue buffers are packed (weights-only impl)"
+    if not _floating(buf):
+        return f"non-float buffer dtype {jnp.asarray(buf).dtype}"
+    if buf.shape[0] != w.shape[0]:
+        return f"expert-count mismatch {buf.shape[0]} vs {w.shape[0]}"
+    return None
+
+
+def _moe_factored(policy, tiles, buf, w, group_sizes=None):
+    # ONE basis GEMM serves every expert in the wave (the shared weight is
+    # loaded once — the paper's weight-reuse guarantee, now across experts
+    # too); each expert contributes only its skinny delta GEMMs.  The basis
+    # contraction runs over the feature axis only, so the summation order
+    # per output element is independent of the wave's slot count — paged
+    # waves stay bit-exact with the all-resident forward.
+    return factored_moe_gemm(buf, w, jnp.dtype(policy.accum_dtype))
+
+
 register("moe_grouped_gemm", "xla_int8", _moe_int8,
          requires=_moe_int8_requires,
          doc="QTensor expert weights: int8 per-channel dequant epilogue / "
              "int4 grouped dequant-then-einsum; fp queue buffers")
+register("moe_grouped_gemm", "xla_factored", _moe_factored,
+         requires=_moe_factored_requires,
+         doc="FactoredTensor expert weights: shared basis GEMM + "
+             "per-expert low-rank/butterfly delta correction (optionally "
+             "int8/int4 delta factors); fp queue buffers")

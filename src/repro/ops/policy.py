@@ -147,6 +147,17 @@ def policy_named(name: str) -> ComputePolicy:
                     keep the registry defaults.  Requires quantized params
                     (``quant.quantize_tree``) and ``kv_quant="int8"`` caches
                     — fp operands fall back loudly in ``dispatch_report()``.
+    ``"xla_factored"`` — factored-expert serving: ``moe_grouped_gemm`` runs
+                    the ``xla_factored`` impl (shared basis GEMM +
+                    per-expert delta correction for FactoredTensor expert
+                    weights).  ``linear`` keeps the registry default —
+                    dense-block weights are not factored; a manually
+                    factored single weight still dispatches ``xla_factored``
+                    via ``with_impls(linear="xla_factored")`` or the
+                    capability fallback chain.  Compose with quantization as
+                    ``policy_named("xla_int8").with_impls(
+                    moe_grouped_gemm="xla_factored")`` (what
+                    ``launch/serve.py --factor --quant int8`` builds).
     """
     if name == "xla":
         return ComputePolicy(default_impl="xla",
@@ -163,8 +174,12 @@ def policy_named(name: str) -> ComputePolicy:
         return ComputePolicy(impls=(("linear", "xla_int8"),
                                     ("moe_grouped_gemm", "xla_int8"),
                                     ("attention_decode", "xla_int8")))
+    if name == "xla_factored":
+        return ComputePolicy(impls=(
+            ("moe_grouped_gemm", "xla_factored"),))
     raise ValueError(f"unknown policy preset: {name!r} "
-                     "(expected xla | blocked | pallas | ref | xla_int8)")
+                     "(expected xla | blocked | pallas | ref | xla_int8 | "
+                     "xla_factored)")
 
 
 # ------------------------------------------------------------ ambient scope

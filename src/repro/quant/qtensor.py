@@ -229,9 +229,13 @@ QUANT_PARAM_NAMES = frozenset({
 
 
 def _quantizable(name: str, leaf, names) -> bool:
-    return (name in names and not is_qtensor(leaf)
+    # the isinstance guard is structural, not just defensive: non-array
+    # leaf groups with array-like duck typing (factor.FactoredTensor has
+    # ndim/shape too) must pass through untouched — their delta factors
+    # are quantized at factorize(delta_bits=...) time, never re-wrapped
+    return (name in names and isinstance(leaf, (np.ndarray, jax.Array))
             and getattr(leaf, "ndim", 0) >= 2
-            and jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating))
+            and jnp.issubdtype(leaf.dtype, jnp.floating))
 
 
 def quantize_tree(tree, bits: int = 8, *, group_size: int = 32,

@@ -47,6 +47,7 @@ from repro.core import routing as R
 from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
                             group_shape)
 from repro.core.unified_linear import unified_linear
+from repro.factor import FactoredTensor, is_factored
 from repro.quant import QTensor, is_qtensor
 from repro.serve.transfer import Transfer
 
@@ -58,9 +59,17 @@ PREFETCH_DROPPED_KEEP = 64
 
 
 def _per_expert_bytes(host: dict) -> int:
-    """Device bytes one expert occupies across all weight leaves — the unit
-    of both paging accounting and byte-budget residency sizing."""
+    """Device bytes one expert occupies across the PAGED weight leaves —
+    the unit of both paging accounting and byte-budget residency sizing.
+    Pinned leaves (a factored layer's shared basis) are deliberately
+    absent from ``host``: they are resident once, not per expert, and are
+    accounted separately (:func:`_pinned_bytes`)."""
     return sum(int(w[0].nbytes) for w in host.values())
+
+
+def _pinned_bytes(pinned: Optional[dict]) -> int:
+    """Device bytes of the always-resident (never paged) leaves."""
+    return sum(int(v.nbytes) for v in (pinned or {}).values())
 
 
 class ExpertUsage:
@@ -125,9 +134,19 @@ class ExpertCache:
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
                  usage: Optional[ExpertUsage] = None,
                  write_cb: Optional[Callable[[int, dict], None]] = None,
-                 transfer_engine=None, label: str = "cache"):
+                 transfer_engine=None, label: str = "cache",
+                 pinned: Optional[dict] = None):
         if not host:
             raise ValueError("empty expert weight store")
+        # pinned leaves (e.g. a factored layer's shared basis) are put on
+        # device ONCE here and never enter the slot store, LRU, or paging
+        # byte accounting — they have no per-expert axis
+        pinned = pinned or {}
+        clash = set(pinned) & set(host)
+        if clash:
+            raise ValueError(f"leaves both pinned and paged: {sorted(clash)}")
+        self.pinned = {n: jnp.asarray(v) for n, v in pinned.items()}
+        self.pinned_bytes = _pinned_bytes(self.pinned)
         # transfer keys are (label, expert) — stable and test-addressable
         # (a FakeTransferEngine ``schedule`` can name them ahead of time)
         self.label = label
@@ -236,6 +255,10 @@ class ExpertCache:
             "resident_fraction": self.max_resident / self.num_experts,
             "prefetch_truncated": self.prefetch_truncated,
             "prefetch_dropped": list(self.prefetch_dropped),
+            # heterogeneous residency accounting: paged bytes scale with
+            # the slot count, pinned bytes are paid once (factored basis)
+            "paged_expert_bytes": self._expert_bytes,
+            "pinned_bytes": self.pinned_bytes,
         }
         if self.engine is not None:
             out.update({
@@ -507,12 +530,25 @@ class ShardedExpertCache:
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
                  mesh, axis: str = "model",
                  usage: Optional[ExpertUsage] = None,
-                 transfer_engine=None):
+                 transfer_engine=None, pinned: Optional[dict] = None):
         if not host:
             raise ValueError("empty expert weight store")
         self.mesh = mesh
         self.axis = axis
         self.engine = transfer_engine
+        # pinned leaves are REPLICATED over the mesh (every shard computes
+        # its experts' waves against the same shared basis) — each device
+        # pays the pinned bytes once, like the single-device cache
+        pinned = pinned or {}
+        clash = set(pinned) & set(host)
+        if clash:
+            raise ValueError(f"leaves both pinned and paged: {sorted(clash)}")
+        self.pinned = {
+            n: jax.device_put(jnp.asarray(v),
+                              NamedSharding(mesh, P(*([None] * np.ndim(v)))))
+            for n, v in pinned.items()
+        }
+        self.pinned_bytes = _pinned_bytes(self.pinned)
         m = int(mesh.shape[axis])
         self.num_shards = m
         self.num_experts = next(iter(host.values())).shape[0]
@@ -600,6 +636,8 @@ class ShardedExpertCache:
             "total_slots": self.total_slots,
             "resident_fraction": self.total_slots / self.num_experts,
             "prefetch_truncated": self.prefetch_truncated,
+            "paged_expert_bytes": self._expert_bytes,
+            "pinned_bytes": self.pinned_bytes,       # per device (replicated)
         }
         if self.engine is not None:
             out.update({
@@ -713,28 +751,60 @@ class PagedMoE:
         # grouped GEMM dispatches the xla_int8 impl.  Packed residency is
         # the memory multiplier: ~4× (int8) / ~8× (int4) more experts fit
         # the same device budget.
+        #
+        # FACTORED expert weights split further: the shared basis is PINNED
+        # (device-resident once, outside the slot store) and only the tiny
+        # per-expert delta factors page (<name>.u / <name>.v, themselves
+        # splitting into .q/.scale when the deltas are quantized).  The
+        # wave rebuilds the FactoredTensor from pinned basis + slot deltas,
+        # so the grouped GEMM dispatches the xla_factored impl — per-expert
+        # paged bytes drop 10-100× and the byte budget buys residency at
+        # the DELTA price.
         self._names = names
         self._qmeta: dict[str, tuple] = {}
+        self._fmeta: dict[str, dict] = {}
         host: dict[str, np.ndarray] = {}
+        pinned: dict[str, np.ndarray] = {}
+
+        def _host_leaf(key: str, leaf):
+            """Flatten one paged leaf (array or QTensor) into host entries;
+            returns the QTensor rebuild meta (or None for plain arrays)."""
+            if is_qtensor(leaf):
+                host[key + ".q"] = np.asarray(leaf.q)
+                host[key + ".scale"] = np.asarray(leaf.scale)
+                return (leaf.bits, leaf.dtype, leaf.rows)
+            host[key] = np.asarray(leaf)
+            return None
+
         for n in names:
             wn = params[n]
-            if is_qtensor(wn):
-                host[n + ".q"] = np.asarray(wn.q)
-                host[n + ".scale"] = np.asarray(wn.scale)
-                self._qmeta[n] = (wn.bits, wn.dtype, wn.rows)
+            if is_factored(wn):
+                pinned[n + ".basis"] = np.asarray(wn.basis)
+                self._fmeta[n] = {
+                    "kind": wn.kind, "dtype": wn.dtype,
+                    "u": _host_leaf(n + ".u", wn.u),
+                    "v": _host_leaf(n + ".v", wn.v),
+                }
+            elif is_qtensor(wn):
+                self._qmeta[n] = _host_leaf(n, wn)
             else:
                 host[n] = np.asarray(wn)
         per_expert = _per_expert_bytes(host)
+        pinned_total = _pinned_bytes(pinned)
         shards = int(self.mesh.shape[ep_axis]) if self.mesh is not None else 1
         e_per_shard = cfg.num_experts // shards
         if budget_bytes is not None:
             # device budget in bytes -> resident slots PER DEVICE (≥ top_k
             # on a single device so one wave can always serve a token's
             # full expert set; per-shard banks only need ≥ 1 — waves
-            # accumulate into disjoint rows, so splitting never hurts)
+            # accumulate into disjoint rows, so splitting never hurts).
+            # Pinned leaves are paid out of the budget FIRST (they are on
+            # device whether or not any expert is resident); only the
+            # remainder buys slots, priced at the PAGED per-expert bytes —
+            # heterogeneous leaves must not inflate the slot cost.
             floor = cfg.top_k if shards == 1 else 1
-            max_resident = max(floor,
-                               int(budget_bytes) // max(per_expert, 1))
+            paged_budget = max(0, int(budget_bytes) - pinned_total)
+            max_resident = max(floor, paged_budget // max(per_expert, 1))
         else:
             # resident_fraction is a per-shard fraction of the shard's
             # owned experts — the same fraction at any mesh size
@@ -751,10 +821,12 @@ class PagedMoE:
         if self.mesh is not None:
             self.cache = ShardedExpertCache(host, max_resident, self.mesh,
                                             axis=ep_axis, usage=self.usage,
-                                            transfer_engine=transfer_engine)
+                                            transfer_engine=transfer_engine,
+                                            pinned=pinned)
         else:
             self.cache = ExpertCache(host, max_resident, usage=self.usage,
-                                     transfer_engine=transfer_engine)
+                                     transfer_engine=transfer_engine,
+                                     pinned=pinned)
         # per-wave record of the most recent forward (wave id, expert
         # count, lookahead submissions, fence stall) — the paged layer's
         # contribution to the serve-time stall/overlap reports
@@ -768,16 +840,28 @@ class PagedMoE:
         self._wave_fn = None
         self._finish_fn = None
 
-    def _slot_params(self, slots):
+    def _slot_params(self, slots, pinned):
         """Rebuild the per-expert params dict from device slot arrays,
-        re-wrapping quantized leaves as QTensors (jit-safe: QTensor is a
-        pytree of the slot tracers)."""
+        re-wrapping quantized leaves as QTensors and factored leaves as
+        FactoredTensors (jit-safe: both are pytrees of the slot tracers;
+        the factored basis comes from the PINNED store, not the slots)."""
+        def leaf(key, qmeta):
+            if qmeta is not None:
+                bits, dt, rows = qmeta
+                return QTensor(slots[key + ".q"], slots[key + ".scale"],
+                               bits=bits, dtype=dt, rows=rows)
+            return slots[key]
+
         out = {}
         for n in self._names:
-            if n in self._qmeta:
-                bits, dt, rows = self._qmeta[n]
-                out[n] = QTensor(slots[n + ".q"], slots[n + ".scale"],
-                                 bits=bits, dtype=dt, rows=rows)
+            if n in self._fmeta:
+                fm = self._fmeta[n]
+                out[n] = FactoredTensor(pinned[n + ".basis"],
+                                        leaf(n + ".u", fm["u"]),
+                                        leaf(n + ".v", fm["v"]),
+                                        kind=fm["kind"], dtype=fm["dtype"])
+            elif n in self._qmeta:
+                out[n] = leaf(n, self._qmeta[n])
             else:
                 out[n] = slots[n]
         return out
@@ -813,14 +897,15 @@ class PagedMoE:
 
         mesh, axis = self.mesh, self.ep_axis
 
-        def wave(groups, routing, slots, wave_mask, remap, rows_acc):
+        def wave(groups, routing, slots, pinned, wave_mask, remap, rows_acc):
             if sharded:
                 # (m, R, ...) shard banks -> flat (m*R, ...) global slots;
                 # the reshape keeps the expert dim shard-contiguous so the
                 # store stays partitioned over the expert-parallel axis
+                # (pinned leaves carry no expert axis — replicated as-is)
                 slots = {n: a.reshape((rs,) + a.shape[2:])
                          for n, a in slots.items()}
-            params_w = self._slot_params(slots)
+            params_w = self._slot_params(slots, pinned)
 
             def per_group(xg, r, rows):
                 in_wave = wave_mask[r.expert]          # (T, k) bool
@@ -861,7 +946,7 @@ class PagedMoE:
             return jax.vmap(per_group)(routing, rows_acc, real)
 
         self._route_fn = jax.jit(route)
-        self._wave_fn = jax.jit(wave, donate_argnums=(5,))
+        self._wave_fn = jax.jit(wave, donate_argnums=(6,))
         self._finish_fn = jax.jit(finish)
         self._built_for = (g, capacity)
 
@@ -921,7 +1006,7 @@ class PagedMoE:
             mask = np.zeros((cfg.num_experts,), bool)
             mask[wave_ids] = True
             rows = self._wave_fn(groups, routing, self.cache.slots,
-                                 jnp.asarray(mask),
+                                 self.cache.pinned, jnp.asarray(mask),
                                  jnp.asarray(remap), rows)
             prefetched: list[int] = []
             if eng is not None:

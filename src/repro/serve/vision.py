@@ -72,7 +72,7 @@ class M3ViTServer:
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
                  ep_mesh=None, async_paging: bool = False,
-                 transfer_engine=None):
+                 transfer_engine=None, factor=None):
         if cfg.family != "vit-moe":
             raise ValueError("M3ViTServer serves the vit-moe family")
         self.cfg = cfg
@@ -97,6 +97,23 @@ class M3ViTServer:
             else:
                 lp = params["rest"][i - n_scan * period]
             self.layer_params.append(lp)
+        # factored experts (``factor=(kind, rank, delta_bits)``): each MoE
+        # layer's expert stack converts to basis + per-expert deltas HERE,
+        # after the per-layer slice — a layer's experts share that layer's
+        # basis (averaging across layers would be semantically wrong, and
+        # the stacked tree's ndim-4 leaves are not factorable anyway).
+        # PagedMoE then pins the basis and pages only the deltas, so the
+        # same expert_budget_bytes holds 10-100× more resident experts.
+        if factor is not None:
+            from repro.factor import factorize_tree
+            f_kind, f_rank, f_bits = factor
+            for i, kind in enumerate(self.kinds):
+                if kind == "attn_moe":
+                    lp = dict(self.layer_params[i])
+                    lp["moe"] = factorize_tree(lp["moe"], kind=f_kind,
+                                               rank=f_rank,
+                                               delta_bits=f_bits)
+                    self.layer_params[i] = lp
         # expert_budget_bytes (per MoE layer) beats resident_fraction when
         # given: quantized expert weights then fit ~4× more resident
         # experts into the same device budget (the hit-rate win)
@@ -284,13 +301,14 @@ class VisionBackend:
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
                  ep_mesh=None, async_paging: bool = False,
-                 transfer_engine=None):
+                 transfer_engine=None, factor=None):
         self.server = M3ViTServer(cfg, params,
                                   resident_fraction=resident_fraction,
                                   expert_budget_bytes=expert_budget_bytes,
                                   rules=rules, ep_mesh=ep_mesh,
                                   async_paging=async_paging,
-                                  transfer_engine=transfer_engine)
+                                  transfer_engine=transfer_engine,
+                                  factor=factor)
         self.num_tasks = len(MV.TASKS)
         self.usage = None   # per-layer usage lives inside each PagedMoE
 

@@ -154,6 +154,85 @@ class TestQuantizedRoundtrip:
         np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_ckpt))
 
 
+class TestFactoredRoundtrip:
+    """FactoredTensor leaves round-trip checkpoints: basis and delta
+    factors (including nested QTensor deltas, whose leaves name themselves
+    ``<param>.u.q`` / ``<param>.u.scale``) are bit-exact, and a PagedMoE
+    serving from the restored tree matches the in-memory one exactly."""
+
+    def ftree(self, delta_bits=None):
+        from repro.factor import factorize
+
+        k = jax.random.PRNGKey(5)
+        w = jax.random.normal(k, (4, 16, 24), jnp.float32)
+        bf = jax.random.normal(k, (4, 16, 36), jnp.float32)
+        return {"layer": {"w": factorize(w, "rank", rank=3,
+                                         delta_bits=delta_bits),
+                          "wb": factorize(bf, "butterfly"),
+                          "b": jnp.zeros((24,), jnp.float32)}}
+
+    @pytest.mark.parametrize("delta_bits", [None, 8])
+    def test_factored_bitexact(self, tmp_path, delta_bits):
+        from repro.quant import is_qtensor
+
+        t = self.ftree(delta_bits)
+        save(str(tmp_path), 1, t)
+        r = restore(str(tmp_path), 1, t)
+        for name in ("w", "wb"):
+            a, b = t["layer"][name], r["layer"][name]
+            assert (a.kind, a.dtype, a.shape) == (b.kind, b.dtype, b.shape)
+            np.testing.assert_array_equal(np.asarray(a.basis),
+                                          np.asarray(b.basis))
+            for fa, fb in ((a.u, b.u), (a.v, b.v)):
+                assert is_qtensor(fa) == is_qtensor(fb)
+                if is_qtensor(fa):
+                    np.testing.assert_array_equal(np.asarray(fa.q),
+                                                  np.asarray(fb.q))
+                    np.testing.assert_array_equal(np.asarray(fa.scale),
+                                                  np.asarray(fb.scale))
+                else:
+                    np.testing.assert_array_equal(np.asarray(fa),
+                                                  np.asarray(fb))
+
+    def test_manifest_names_factored_leaves(self, tmp_path):
+        import json
+        import os
+
+        save(str(tmp_path), 1, self.ftree(delta_bits=8))
+        with open(os.path.join(tmp_path, "step_1", "manifest.json")) as f:
+            leaves = json.load(f)["leaves"]
+        assert "layer.w.basis" in leaves
+        # quantized deltas nest: QTensor children of the FactoredTensor
+        assert "layer.w.u.q" in leaves and "layer.w.u.scale" in leaves
+        assert "layer.w.v.q" in leaves
+        # fp butterfly deltas stay flat
+        assert "layer.wb.u" in leaves and "layer.wb.v" in leaves
+        assert leaves["layer.w.u.q"]["dtype"] == "int8"
+
+    def test_paged_moe_from_restored_checkpoint(self, tmp_path):
+        from repro import ops
+        from repro.core.moe import MoEConfig, init_moe
+        from repro.factor import factorize_tree
+        from repro.serve.expert_cache import PagedMoE
+
+        cfg = MoEConfig(d_model=16, d_ff=24, num_experts=4, top_k=2,
+                        num_tasks=2, expert_kind="gelu",
+                        capacity_factor=2.0, group_size=64, impl="grouped")
+        fparams = factorize_tree(
+            init_moe(jax.random.PRNGKey(0), cfg, dtype=jnp.float32),
+            rank=4, delta_bits=8)
+        save(str(tmp_path), 2, fparams)
+        restored = restore(str(tmp_path), 2, fparams)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 20, 16),
+                              jnp.float32)
+        with ops.use_policy(ops.policy_named("xla_factored")):
+            y_mem, _ = PagedMoE(fparams, cfg, resident_fraction=0.5)(
+                x, task_id=1)
+            y_ckpt, _ = PagedMoE(restored, cfg, resident_fraction=0.5)(
+                x, task_id=1)
+        np.testing.assert_array_equal(np.asarray(y_mem), np.asarray(y_ckpt))
+
+
 class TestElasticRestore:
     def test_restore_with_shardings(self, tmp_path):
         """Mesh-agnostic restore: leaves are placed onto the live mesh's

@@ -232,3 +232,55 @@ class TestExpertUsage:
         assert paged.cache.hit_rate == 1.0
         # and routing really was task-disjoint
         assert paged.usage.task_overlap() < 0.05
+
+
+class TestPinnedAccounting:
+    """Heterogeneous residency accounting (factored experts split every
+    layer into a pinned shared basis + paged per-expert deltas): stats()
+    report the two pools separately, paging traffic counts only the paged
+    unit, and the byte budget sizes residency on paged bytes alone."""
+
+    def _host(self, e=6):
+        rng = np.random.default_rng(0)
+        return {"w": rng.standard_normal((e, 4, 4)).astype(np.float32)}
+
+    def test_stats_split_pinned_from_paged(self):
+        pinned = {"w.basis": np.ones((4, 4), np.float32)}
+        cache = ExpertCache(self._host(), max_resident=3, pinned=pinned)
+        s = cache.stats()
+        assert s["pinned_bytes"] == 64
+        assert s["paged_expert_bytes"] == 64    # one (4,4) f32 per expert
+        cache.ensure([0, 1])
+        assert cache.stats()["bytes_paged"] == 2 * 64   # deltas only
+
+    def test_pinned_leaves_live_on_device_untouched(self):
+        host = self._host()
+        basis = np.arange(16, dtype=np.float32).reshape(4, 4)
+        cache = ExpertCache(host, max_resident=2,
+                            pinned={"w.basis": basis})
+        cache.ensure([0, 5])
+        cache.ensure([3, 2])            # evictions never touch pinned
+        np.testing.assert_array_equal(np.asarray(cache.pinned["w.basis"]),
+                                      basis)
+
+    def test_pinned_paged_name_clash_rejected(self):
+        with pytest.raises(ValueError, match="pinned and paged"):
+            ExpertCache(self._host(), max_resident=2,
+                        pinned={"w": np.ones((4, 4), np.float32)})
+
+    def test_budget_sizing_with_mixed_size_leaves(self):
+        """Regression: the per-expert unit is the SUM across weight leaves
+        of different sizes (w1/b1/w2/b2 in a gelu FFN) — sizing on any
+        single leaf over- or under-counts residency."""
+        cfg = _cfg(expert_kind="gelu")
+        params, _ = _setup(cfg, dtype=jnp.float32)
+        probe = PagedMoE(params, cfg, resident_fraction=1.0)
+        per = probe.cache.stats()["paged_expert_bytes"]
+        d, f = cfg.d_model, cfg.d_ff
+        assert per == 4 * (d * f + f + f * d + d)   # f32 w1+b1+w2+b2
+        for n in (2, 5):
+            paged = PagedMoE(params, cfg, budget_bytes=n * per)
+            assert paged.cache.max_resident == n
+        # one byte short of n experts floors to n-1
+        paged = PagedMoE(params, cfg, budget_bytes=3 * per - 1)
+        assert paged.cache.max_resident == max(cfg.top_k, 2)
