@@ -161,11 +161,12 @@ def smoke():
     matrix = ops.capability_matrix()
     missing = []
     for op, impls in matrix.items():
-        if "pallas" not in impls:
-            continue
-        blocks = ops.schedule_for(op, "pallas", {}, backend="interpret")
-        if not blocks or not all(isinstance(v, int) for v in blocks.values()):
-            missing.append(op)
+        # every kernel-backed impl is tunable: "pallas" and "pallas_fused"
+        for impl in (n for n in impls if n.startswith("pallas")):
+            blocks = ops.schedule_for(op, impl, {}, backend="interpret")
+            if not blocks or not all(isinstance(v, int)
+                                     for v in blocks.values()):
+                missing.append(f"{op}.{impl}")
     if missing:
         raise SystemExit(f"schedule table missing interpret entries for: "
                          f"{missing}")
@@ -187,6 +188,15 @@ def smoke():
         ops.dispatch("moe_grouped_gemm", buf, we,
                      jnp.asarray([4, 8], jnp.int32))
         ops.apply_activation(x, "silu")
+    # the fused megakernel ops (moe_ffn, fused decode) under their policy
+    from repro.core import moe as M
+    mcfg = M.MoEConfig(d_model=16, d_ff=32, num_experts=4, top_k=2,
+                       expert_kind="gelu", group_size=32)
+    mparams = M.init_moe(jax.random.PRNGKey(0), mcfg, dtype=jnp.float32)
+    xm = jnp.asarray(rng.normal(size=(32, 16)), jnp.float32)
+    with ops.use_policy(ops.policy_named("pallas_fused")):
+        M.apply_moe(mparams, mcfg, xm)
+        A.decode_attention(q[:, :, :1], q, q, jnp.full((1,), 8, jnp.int32))
     report = ops.dispatch_report()
     uncovered = [op for op in matrix if op not in report]
     if uncovered:

@@ -36,6 +36,7 @@ __all__ = [
     "exact_gelu",
     "exact_silu",
     "build_delta_table",
+    "lut_correction",
     "lut_gelu",
     "lut_silu",
     "lut_activation",
@@ -60,6 +61,29 @@ def exact_silu(x):
     return x * jax.nn.sigmoid(x)
 
 
+def _delta_table_f64(kind: str, step_log2: int, rng: float) -> np.ndarray:
+    """The single source of the correction table, in float64 NumPy.
+
+    ``build_delta_table`` and ``_cached_table`` both derive from this — they
+    used to duplicate the computation, which risked the shipped table and
+    the cached one drifting apart.
+    """
+    step = 2.0**step_log2
+    n = int(rng / step)
+    xs = np.arange(n, dtype=np.float64) * step
+    if kind == "gelu":
+        from math import erf
+
+        base = xs * 0.5 * (1.0 + np.vectorize(erf)(xs / math.sqrt(2.0)))
+    elif kind == "silu":
+        base = xs / (1.0 + np.exp(-xs))
+    else:
+        raise ValueError(f"unknown LUT activation kind: {kind}")
+    delta = np.maximum(xs, 0.0) - base
+    assert (delta >= 0.0).all() and (delta < 1.0).all()
+    return delta
+
+
 def build_delta_table(
     kind: str = "gelu",
     step_log2: int = LUT_STEP_LOG2,
@@ -73,21 +97,7 @@ def build_delta_table(
     are bounded in [0, 1) so on real fixed-point hardware only fractional bits
     are stored; in JAX we simply keep them in ``dtype``.
     """
-    step = 2.0**step_log2
-    n = int(rng / step)
-    xs = np.arange(n, dtype=np.float64) * step
-    if kind == "gelu":
-        from math import erf
-
-        gelu = xs * 0.5 * (1.0 + np.vectorize(erf)(xs / math.sqrt(2.0)))
-        delta = np.maximum(xs, 0.0) - gelu
-    elif kind == "silu":
-        silu = xs / (1.0 + np.exp(-xs))
-        delta = np.maximum(xs, 0.0) - silu
-    else:
-        raise ValueError(f"unknown LUT activation kind: {kind}")
-    assert (delta >= 0.0).all() and (delta < 1.0).all()
-    return jnp.asarray(delta, dtype=dtype)
+    return jnp.asarray(_delta_table_f64(kind, step_log2, rng), dtype=dtype)
 
 
 @functools.lru_cache(maxsize=None)
@@ -96,18 +106,31 @@ def _cached_table(kind: str, step_log2: int, rng: float) -> np.ndarray:
     # site.  Host-side caching is load-bearing: an lru_cache over device
     # arrays would pin the value to first-call placement and go stale once
     # a mesh is active (see serve/engine._stub_embed_table)
-    step = 2.0**step_log2
-    n = int(rng / step)
-    xs = np.arange(n, dtype=np.float64) * step
-    if kind == "gelu":
-        from math import erf
+    return _delta_table_f64(kind, step_log2, rng).astype(np.float32)
 
-        base = xs * 0.5 * (1.0 + np.vectorize(erf)(xs / math.sqrt(2.0)))
-    elif kind == "silu":
-        base = xs / (1.0 + np.exp(-xs))
-    else:
-        raise ValueError(f"unknown LUT activation kind: {kind}")
-    return (np.maximum(xs, 0.0) - base).astype(np.float32)
+
+def lut_correction(y, table, step_log2: int):
+    """ReLU(y) − δ(|y|) with non-finite inputs handled like the exact forms.
+
+    Shared by the jnp path and every kernel epilogue.  The index is clamped
+    to the table (NaN/Inf used to flow through ``round().astype(int32)``
+    into an implementation-defined — possibly negative, wrapping — gather
+    index); non-finite y bypass the table entirely and return
+    ``y * 0.5 * (1 + sign(y))``, which reproduces the exact-activation
+    limits: +inf → +inf, −inf → NaN (as ``exact_gelu``/``exact_silu`` give),
+    NaN → NaN.  ``y`` and ``table`` must share a float dtype.
+    """
+    n = table.shape[0]
+    scale = 2.0 ** (-step_log2)
+    ay = jnp.abs(y)
+    finite = jnp.isfinite(y)
+    # in-range decided in float (the int32 cast of a huge |y|·scale is
+    # garbage); the clamped index only matters when in_range holds
+    in_range = finite & (ay * scale < n)
+    idx = jnp.clip(jnp.round(ay * scale).astype(jnp.int32), 0, n - 1)
+    delta = jnp.where(in_range, jnp.take(table, idx), 0.0)
+    out = jnp.maximum(y, 0.0) - delta
+    return jnp.where(finite, out, y * 0.5 * (1.0 + jnp.sign(y)))
 
 
 def lut_activation(
@@ -127,15 +150,9 @@ def lut_activation(
     """
     if table is None:
         table = jnp.asarray(_cached_table(kind, step_log2, float(rng)))
-    n = table.shape[0]
-    ax = jnp.abs(x)
-    # bit-shift indexing: multiply by 2^-step_log2, round to nearest entry
-    idx = jnp.round(ax * (2.0 ** (-step_log2))).astype(jnp.int32)
-    in_range = idx < n
-    idx = jnp.minimum(idx, n - 1)
-    delta = jnp.take(table, idx)
-    delta = jnp.where(in_range, delta, 0.0)
-    return (jax.nn.relu(x) - delta.astype(x.dtype)).astype(x.dtype)
+    y = lut_correction(x.astype(jnp.float32), table.astype(jnp.float32),
+                       step_log2)
+    return y.astype(x.dtype)
 
 
 def lut_gelu(x, **kw):

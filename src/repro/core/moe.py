@@ -36,7 +36,6 @@ import jax.numpy as jnp
 
 from repro.core import routing as R
 from repro.core.unified_linear import unified_linear
-from repro.dist.sharding import constrain
 
 __all__ = ["MoEConfig", "init_moe", "apply_moe", "group_shape",
            "expert_param_names"]
@@ -244,22 +243,16 @@ def apply_moe(params, cfg: MoEConfig, x: jax.Array, task_id=0,
                                  jnp.int32).at[
                     jnp.repeat(tg, cfg.top_k), r.expert.reshape(-1)].add(
                         stat_valid.reshape(-1).astype(jnp.int32))
-        with jax.named_scope("moe_dispatch"):
-            if cfg.impl == "onehot":
-                buf = R.dispatch_onehot(xg, r, cfg.num_experts, capacity)
-            else:
-                buf = R.dispatch(xg, r, cfg.num_experts, capacity)
-            # expert-parallel layout under an active mesh: the (E, C, d)
-            # buffer shards over the model axis, turning dispatch/combine
-            # into the token all-to-all (no-op without rules)
-            buf = constrain(buf, "ecd")
-        with jax.named_scope("moe_ffn"):
-            out = _expert_ffn(params, cfg, buf, group_sizes)
-        with jax.named_scope("moe_combine"):
-            if cfg.impl == "onehot":
-                y = R.combine_onehot(out, r)
-            else:
-                y = R.combine(out, r)
+        # the whole routed expert layer is ONE op: the staged impl
+        # reproduces the dispatch / _expert_ffn / combine pipeline (with
+        # its named scopes), the pallas_fused impl runs it as a single
+        # megakernel with no (E, C, d) buffer
+        from repro.ops.registry import dispatch as op_dispatch
+
+        y = op_dispatch("moe_ffn", xg,
+                        {k: params[k] for k in expert_param_names(cfg)},
+                        r, group_sizes, cfg=cfg, capacity=capacity)
+        with jax.named_scope("moe_aux"):
             aux = R.load_balance_loss(r.probs, r.expert, cfg.num_experts,
                                       mask=real)
         return y.astype(x.dtype), aux, stat

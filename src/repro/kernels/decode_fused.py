@@ -1,0 +1,150 @@
+"""Fused single-pass decode attention — §IV-B's "Pass 3" consumed in-kernel.
+
+One query row per sequence against its KV-cache prefix.  The single-pass
+softmax carry (``core/online_softmax.py``: running max m, running sum s,
+rescale by ``exp(m_old − m_new)`` when a new max arrives) streams K blocks
+exactly once, and the final ``exp/div`` — the paper's "Pass 3" — never
+materializes probabilities: it is consumed by the PV product (the f32
+accumulator is rescaled by the same α as the sum) and a single divide at
+the end.  This is ``merge_stats`` applied block-at-a-time, the kernel twin
+of ``online_max_sum_blocked``.
+
+The capability upgrade over the prefill-kernel reuse (``attention_decode``
+impl ``"pallas"``): per-sequence cache lengths ride in as a scalar-prefetch
+array and are read at *run* time (``cl = cl_ref[b]``), so traced and
+non-uniform decode positions — continuous batching — dispatch to the kernel
+instead of falling back, and one compiled program serves every length.
+
+Layout: q ``(B, Hq, 1, d)`` is regrouped to ``(B, Hkv, G, d)`` (GQA group as
+sublanes — the MXU sees a G×d × d×block_k GEMM per tile, not Hq rank-1
+products).  Grid ``(B, Hkv, nk)``, K innermost; K tiles at or beyond the
+prefix (``k_lo ≥ cl``, plus the sliding-window frontier) are skipped via
+``pl.when`` on the prefetched lengths.  Empty caches (cl = 0) produce exact
+zeros (acc 0 / max(l, tiny)), matching the ``ref`` oracle.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["fused_decode_kernel", "fused_decode_call"]
+
+NEG_INF = -1e30
+LANES = 128
+
+
+def fused_decode_kernel(
+    cl_ref,                        # (B,) int32 scalar-prefetch cache lengths
+    q_ref, k_ref, v_ref,           # (1,1,Gp,d), (1,1,bk,d), (1,1,bk,d)
+    o_ref,                         # (1,1,Gp,d)
+    m_scr, l_scr, acc_scr,
+    *,
+    window: int | None, block_k: int,
+):
+    b = pl.program_id(0)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+    cl = cl_ref[b]
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    k_lo = ki * block_k
+    # run-time tile skip from the prefetched length: only blocks overlapping
+    # the live prefix [max(0, cl-window), cl) are computed
+    needed = k_lo < cl
+    if window is not None:
+        needed &= (k_lo + block_k - 1) > cl - 1 - window
+
+    @pl.when(needed)
+    def _compute():
+        bq = m_scr.shape[0]
+        q = q_ref[0, 0].astype(jnp.float32)                  # (Gp, d) pre-scaled
+        k = k_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)              # (Gp, bk)
+
+        kpos = k_lo + jax.lax.broadcasted_iota(
+            jnp.int32, (bq, block_k), 1)
+        ok = kpos < cl
+        if window is not None:
+            ok &= kpos > cl - 1 - window
+        s = jnp.where(ok, s, NEG_INF)
+
+        # merge_stats of the carried (m, l) with this block's statistics,
+        # with the PV accumulator rescaled by the same α (Algorithm 1 §IV-B)
+        m_prev = m_scr[:, :1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)
+        p = jnp.where(ok, p, 0.0)
+        l_new = l_scr[:, :1] * alpha + jnp.sum(p, axis=1, keepdims=True)
+
+        v = v_ref[0, 0].astype(jnp.float32)                  # (bk, d)
+        pv = jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + pv
+        m_scr[...] = jnp.broadcast_to(m_new, m_scr.shape)
+        l_scr[...] = jnp.broadcast_to(l_new, l_scr.shape)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        # "Pass 3": the exp already happened in the consumer; one divide.
+        # cl = 0 never computed → acc 0 / 1e-37 = exact zero output.
+        l = l_scr[:, :1]
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l, 1e-37)).astype(o_ref.dtype)
+
+
+def fused_decode_call(q, k_cache, v_cache, cache_len, *,
+                      window: int | None = None, scale: float,
+                      block_k: int = 128,
+                      interpret: bool | None = None):
+    """Raw call on padded operands.  Use ``ops.fused_decode_attention``.
+
+    q: (B, Hkv, Gp, D) pre-scaled by ``scale``; k/v: (B, Hkv, Skv_pad, D);
+    cache_len: (B,) int32.  Gp % 8 == 0, Skv_pad % block_k == 0, D % 128 == 0.
+    """
+    interpret = resolve_interpret(interpret)
+    b, hkv, gp, d = q.shape
+    skv_pad = k_cache.shape[2]
+    nk = skv_pad // block_k
+    q = q * jnp.asarray(scale, q.dtype)
+
+    kernel = functools.partial(fused_decode_kernel, window=window,
+                               block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, hkv, nk),
+            in_specs=[
+                pl.BlockSpec((1, 1, gp, d),
+                             lambda b, h, ki, cl: (b, h, 0, 0)),
+                pl.BlockSpec((1, 1, block_k, d),
+                             lambda b, h, ki, cl: (b, h, ki, 0)),
+                pl.BlockSpec((1, 1, block_k, d),
+                             lambda b, h, ki, cl: (b, h, ki, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, gp, d),
+                                   lambda b, h, ki, cl: (b, h, 0, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((gp, LANES), jnp.float32),   # m
+                pltpu.VMEM((gp, LANES), jnp.float32),   # l
+                pltpu.VMEM((gp, d), jnp.float32),       # acc
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hkv, gp, d), q.dtype),
+        interpret=interpret,
+    )(cache_len, q, k_cache, v_cache)

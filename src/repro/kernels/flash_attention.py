@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["flash_attention_kernel", "flash_attention_call"]
 
 NEG_INF = -1e30
@@ -116,13 +118,14 @@ def flash_attention_call(
     block_k: int = 128,
     sq_orig: int,
     skv_orig: int,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Raw pallas_call on padded inputs.  Use ``ops.flash_attention`` instead.
 
     q: (B, Hq, Sq_pad, D); k, v: (B, Hkv, Skv_pad, D); Sq_pad % block_q == 0,
     Skv_pad % block_k == 0, D % 128 == 0.  GQA via K/V index maps.
     """
+    interpret = resolve_interpret(interpret)
     b, hq, sq_pad, d = q.shape
     hkv = k.shape[1]
     skv_pad = k.shape[2]

@@ -19,27 +19,26 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.core.gelu import lut_correction
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["lut_activation_kernel", "lut_activation_call"]
 
 
 def lut_activation_kernel(x_ref, table_ref, o_ref, *, step_log2: int):
     x = x_ref[...]
     table = table_ref[0]                          # (n_entries,)
-    n = table.shape[0]
-    ax = jnp.abs(x.astype(jnp.float32))
-    # bit-shift indexing: |x| * 2^-step_log2, rounded to the nearest entry
-    idx = jnp.round(ax * (2.0 ** (-step_log2))).astype(jnp.int32)
-    in_range = idx < n
-    idx = jnp.minimum(idx, n - 1)
-    delta = jnp.take(table, idx)
-    delta = jnp.where(in_range, delta, 0.0)       # truncated support ⇒ ReLU
-    y = jnp.maximum(x.astype(jnp.float32), 0.0) - delta
+    # bit-shift indexing (|x| * 2^-step_log2 → nearest entry) with the
+    # clamped-index / NaN-Inf-propagating form shared with core.gelu
+    y = lut_correction(x.astype(jnp.float32), table, step_log2)
     o_ref[...] = y.astype(o_ref.dtype)
 
 
 def lut_activation_call(x2d, table, *, step_log2: int = -8,
-                        block_rows: int = 256, interpret: bool = True):
+                        block_rows: int = 256,
+                        interpret: bool | None = None):
     """x2d: (R, 128) padded; table: (n,) f32.  Returns act(x2d)."""
+    interpret = resolve_interpret(interpret)
     rows = x2d.shape[0]
     lanes = x2d.shape[1]
     nb = rows // block_rows

@@ -25,11 +25,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["moe_gemm_kernel", "moe_gemm_call"]
 
 
-def moe_gemm_kernel(sizes_ref, buf_ref, w_ref, o_ref, acc_scr):
+def moe_gemm_kernel(sizes_ref, buf_ref, w_ref, o_ref, acc_scr, *,
+                    block_c: int):
     e = pl.program_id(0)
+    ci = pl.program_id(1)
     ki = pl.program_id(3)
     nk = pl.num_programs(3)
     active = sizes_ref[e] > 0                     # the metaqueue membership
@@ -46,22 +50,31 @@ def moe_gemm_kernel(sizes_ref, buf_ref, w_ref, o_ref, acc_scr):
 
     @pl.when(ki == nk - 1)
     def _write():
-        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+        # rows at or beyond this expert's queue length are part of the op
+        # contract zeroed — without the mask, padded-tail C rows carried
+        # whatever buf's tail held (the combine's scatter weights hide it in
+        # the model path, but any direct consumer read stale garbage)
+        row = ci * block_c + jax.lax.broadcasted_iota(
+            jnp.int32, acc_scr.shape, 0)
+        keep = row < sizes_ref[e]
+        o_ref[0] = jnp.where(keep, acc_scr[...], 0.0).astype(o_ref.dtype)
 
 
 def moe_gemm_call(buf, w, group_sizes, *,
                   block_c: int = 128, block_f: int = 256, block_k: int = 512,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """Raw call on padded operands.  Use ``ops.moe_gemm`` instead.
 
     buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 queue lengths.
     C % block_c == F % block_f == D % block_k == 0 (wrapper pads).
+    Output rows at index >= group_sizes[e] come out exactly zero.
     """
+    interpret = resolve_interpret(interpret)
     e, c, d = buf.shape
     f = w.shape[2]
     nc, nf, nk = c // block_c, f // block_f, d // block_k
     return pl.pallas_call(
-        moe_gemm_kernel,
+        functools.partial(moe_gemm_kernel, block_c=block_c),
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=(e, nc, nf, nk),

@@ -25,32 +25,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gelu import _cached_table
+from repro.kernels import decode_fused as _df
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gelu_lut as _gl
+from repro.kernels import moe_fused as _mf
 from repro.kernels import moe_gemm as _mg
 from repro.kernels import unified_linear as _ul
 from repro.ops.schedules import schedule_for
 
-__all__ = ["flash_attention", "unified_linear", "moe_gemm", "lut_activation"]
+__all__ = ["flash_attention", "unified_linear", "moe_gemm", "lut_activation",
+           "fused_moe_ffn", "fused_decode_attention"]
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def _pad_to(x, mult: int, axis: int):
+def _pad_to(x, mult: int, axis: int, value=0):
     size = x.shape[axis]
     pad = (-size) % mult
     if pad == 0:
         return x
     widths = [(0, 0)] * x.ndim
     widths[axis] = (0, pad)
-    return jnp.pad(x, widths)
+    return jnp.pad(x, widths, constant_values=value)
 
 
-def _blocks(op: str, dims: dict, given: dict) -> dict:
+def _blocks(op: str, dims: dict, given: dict, impl: str = "pallas") -> dict:
     """Merge schedule-table blocks with explicitly pinned ones (non-None)."""
-    out = schedule_for(op, "pallas", dims)
+    out = schedule_for(op, impl, dims)
     out.update({k: v for k, v in given.items() if v is not None})
     return out
 
@@ -60,10 +59,11 @@ def _blocks(op: str, dims: dict, given: dict) -> dict:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "window", "q_offset", "scale", "block_q", "block_k"),
+    static_argnames=("causal", "window", "q_offset", "scale", "block_q",
+                     "block_k", "interpret"),
 )
 def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
-                    scale=None, block_q=None, block_k=None):
+                    scale=None, block_q=None, block_k=None, interpret=None):
     """Tiled flash attention (paper technique ①+②).
 
     q: (B, Hq, Sq, D); k, v: (B, Hkv, Skv, D) -> (B, Hq, Sq, D).
@@ -86,7 +86,7 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     out = _fa.flash_attention_call(
         qp, kp, vp, causal=causal, window=window, q_offset=q_offset,
         scale=scale, block_q=bq, block_k=bk, sq_orig=sq, skv_orig=skv,
-        interpret=_interpret())
+        interpret=interpret)
     return out[:, :, :sq, :d]
 
 
@@ -96,11 +96,11 @@ def flash_attention(q, k, v, *, causal=True, window=None, q_offset=0,
 @functools.partial(
     jax.jit,
     static_argnames=("activation", "use_lut", "step_log2", "lut_range",
-                     "block_m", "block_n", "block_k"),
+                     "block_m", "block_n", "block_k", "interpret"),
 )
 def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
                    step_log2=-8, lut_range=8.0,
-                   block_m=None, block_n=None, block_k=None):
+                   block_m=None, block_n=None, block_k=None, interpret=None):
     """One blocked GEMM for every linear layer (technique ④, fused ③).
 
     x: (..., K); w: (K, N); b: (N,) f32 or None.  Leading dims are flattened
@@ -126,15 +126,17 @@ def unified_linear(x, w, b=None, *, activation=None, use_lut=False,
     y = _ul.unified_linear_call(
         xp, wp, bp, table, activation=activation, use_lut=use_lut,
         step_log2=step_log2,
-        block_m=bm, block_n=bn, block_k=bk, interpret=_interpret())
+        block_m=bm, block_n=bn, block_k=bk, interpret=interpret)
     return y[:m, :n].reshape(*lead, n)
 
 
 # ------------------------------------------------------------ moe grouped gemm
 
 
-@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k"))
-def moe_gemm(buf, w, group_sizes, *, block_c=None, block_f=None, block_k=None):
+@functools.partial(jax.jit, static_argnames=("block_c", "block_f", "block_k",
+                                             "interpret"))
+def moe_gemm(buf, w, group_sizes, *, block_c=None, block_f=None, block_k=None,
+             interpret=None):
     """Expert-by-expert grouped GEMM (technique ⑤): out[e] = buf[e] @ w[e].
 
     buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 — experts with an
@@ -152,7 +154,7 @@ def moe_gemm(buf, w, group_sizes, *, block_c=None, block_f=None, block_k=None):
     wp = _pad_to(_pad_to(w, bk, 1), bf, 2)
     out = _mg.moe_gemm_call(bufp, wp, group_sizes.astype(jnp.int32),
                             block_c=bc, block_f=bf, block_k=bk,
-                            interpret=_interpret())
+                            interpret=interpret)
     return out[:, :c, :f]
 
 
@@ -160,9 +162,9 @@ def moe_gemm(buf, w, group_sizes, *, block_c=None, block_f=None, block_k=None):
 
 
 @functools.partial(jax.jit, static_argnames=("kind", "step_log2", "lut_range",
-                                              "block_rows"))
+                                              "block_rows", "interpret"))
 def lut_activation(x, kind="gelu", *, step_log2=-8, lut_range=8.0,
-                   block_rows=None):
+                   block_rows=None, interpret=None):
     """Standalone LUT activation kernel (technique ③).  Elementwise."""
     table = jnp.asarray(_cached_table(kind, step_log2, lut_range))
     flat = x.reshape(-1)
@@ -177,5 +179,107 @@ def lut_activation(x, kind="gelu", *, step_log2=-8, lut_range=8.0,
     xp = jnp.zeros((rows_p * lanes,), x.dtype).at[:n].set(flat)
     y = _gl.lut_activation_call(xp.reshape(rows_p, lanes), table,
                                 step_log2=step_log2, block_rows=br,
-                                interpret=_interpret())
+                                interpret=interpret)
     return y.reshape(-1)[:n].reshape(x.shape)
+
+
+# ------------------------------------------------------- fused moe megakernel
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "capacity", "use_lut", "step_log2", "lut_range",
+                     "block_c", "interpret"),
+)
+def fused_moe_ffn(x, params, expert, gate, position, valid, group_sizes, *,
+                  kind, capacity, use_lut=True, step_log2=-8, lut_range=8.0,
+                  block_c=None, interpret=None):
+    """Dispatch + expert MLPs + combine in ONE kernel (no (E, C, d) buffer).
+
+    x: (T, d) token activations; params: expert weight dict (``w1/b1/w2/b2``
+    or ``wg/wu/wd``, leading E axis); expert/gate/position/valid: the
+    routing decision (T, k); group_sizes: (E,) int32 queue lengths.
+    Returns the gate-combined (T, d) output in x.dtype.
+    """
+    t, k = expert.shape
+    d = x.shape[-1]
+    e_num = group_sizes.shape[0]
+    c = capacity
+    if kind == "swiglu":
+        f = params["wg"].shape[2]
+        weights = (params["wg"], params["wu"], params["wd"])
+    else:
+        f = params["w1"].shape[2]
+        weights = (params["w1"], params["b1"], params["w2"], params["b2"])
+    sched = _blocks("moe_ffn", {"e": e_num, "c": c, "d": d, "f": f, "t": t},
+                    {"block_c": block_c}, impl="pallas_fused")
+    bc = min(sched.get("block_c", 64), max(8, 1 << (c - 1).bit_length()))
+
+    # per-expert queues as index/weight arrays (the queues of Fig. 9d,
+    # by-reference): slot s of token tt lands at tok_idx[e, p]; dead slots
+    # (capacity drops, unused rows) stay at −1 / gate 0 via the scrap column
+    eidx = expert.reshape(-1)
+    p = position.reshape(-1)
+    v = valid.reshape(-1)
+    gv = gate.reshape(-1).astype(jnp.float32) * v.astype(jnp.float32)
+    tokids = jnp.repeat(jnp.arange(t, dtype=jnp.int32), k)
+    p_safe = jnp.where(v, p, c)
+    tok_idx = jnp.full((e_num, c + 1), -1, jnp.int32) \
+        .at[eidx, p_safe].set(tokids)[:, :c]
+    gates = jnp.zeros((e_num, c + 1), jnp.float32) \
+        .at[eidx, p_safe].set(gv)[:, :c]
+    tok_idx = _pad_to(tok_idx, bc, 1, value=-1)
+    gates = _pad_to(gates, bc, 1)
+
+    xp = _pad_to(_pad_to(x, 128, 0), 128, 1)
+    wp = []
+    for w in weights:
+        w = _pad_to(w, 128, 1)                   # d or f axis
+        if w.ndim == 3:
+            w = _pad_to(w, 128, 2)
+        wp.append(w)
+    table = jnp.asarray(
+        _cached_table("silu" if kind == "swiglu" else "gelu",
+                      step_log2, lut_range))[None, :] if use_lut \
+        else jnp.zeros((1, 8), jnp.float32)
+    out = _mf.fused_moe_call(
+        tok_idx, gates, xp, tuple(wp), table,
+        group_sizes.astype(jnp.int32), kind=kind, block_c=bc,
+        use_lut=use_lut, step_log2=step_log2, interpret=interpret)
+    return out[:t, :d].astype(x.dtype)
+
+
+# ------------------------------------------------------- fused decode kernel
+
+
+@functools.partial(jax.jit, static_argnames=("window", "scale", "block_k",
+                                             "interpret"))
+def fused_decode_attention(q, k_cache, v_cache, cache_len, *, window=None,
+                           scale=None, block_k=None, interpret=None):
+    """Single-pass decode attention; per-slot cache lengths read at run time.
+
+    q: (B, Hq, 1, D); k/v_cache: (B, Hkv, Smax, D); cache_len: scalar or
+    (B,) int32 — may be traced and non-uniform (continuous batching).
+    """
+    b, hq, _one, d = q.shape
+    hkv = k_cache.shape[1]
+    group = hq // hkv
+    smax = k_cache.shape[2]
+    scale = scale if scale is not None else 1.0 / math.sqrt(d)
+    sched = _blocks("attention_decode", {"sq": 1, "skv": smax, "d": d},
+                    {"block_k": block_k}, impl="pallas_fused")
+    bk = min(sched.get("block_k", 128),
+             max(128, 1 << (smax - 1).bit_length()))
+
+    # GQA group as sublanes: query head h = hkv_idx * group + g reads kv
+    # head hkv_idx, so the (B, Hq, 1, d) query regroups losslessly
+    qg = q.reshape(b, hkv, group, d)
+    qp = _pad_to(_pad_to(qg, 8, 2), 128, 3)
+    kp = _pad_to(_pad_to(k_cache, bk, 2), 128, 3)
+    vp = _pad_to(_pad_to(v_cache, bk, 2), 128, 3)
+    cl = jnp.broadcast_to(
+        jnp.asarray(cache_len, jnp.int32).reshape(-1), (b,))
+    out = _df.fused_decode_call(
+        qp, kp, vp, cl, window=window, scale=scale, block_k=bk,
+        interpret=interpret)
+    return out[:, :, :group, :d].reshape(b, hq, 1, d)

@@ -17,6 +17,7 @@ __all__ = [
     "ref_linear",
     "ref_lut_activation",
     "ref_moe_gemm",
+    "ref_moe_ffn",
 ]
 
 
@@ -81,11 +82,52 @@ def ref_lut_activation(x, kind="gelu", step_log2=-8, rng=8.0):
 
 
 def ref_moe_gemm(buf, w, group_sizes=None):
-    """Grouped GEMM: out[e] = buf[e] @ w[e]; experts with size 0 output zeros.
+    """Grouped GEMM: out[e] = buf[e] @ w[e]; rows past group_sizes[e] are zero.
 
     buf: (E, C, D); w: (E, D, F); group_sizes: (E,) int32 or None.
+    The mask is row-level (not whole-expert): a queue of length s occupies
+    rows [0, s) and the padded tail [s, C) must come out exactly zero
+    regardless of what buf's tail holds.
     """
     out = jnp.einsum("ecd,edf->ecf", buf, w, preferred_element_type=jnp.float32)
     if group_sizes is not None:
-        out = out * (group_sizes > 0).astype(out.dtype)[:, None, None]
+        c = buf.shape[1]
+        keep = jnp.arange(c)[None, :, None] < group_sizes[:, None, None]
+        out = jnp.where(keep, out, 0.0)
     return out.astype(buf.dtype)
+
+
+def ref_moe_ffn(x, params, routing, *, cfg):
+    """Token-level dense oracle for the fused MoE FFN (op ``"moe_ffn"``).
+
+    Runs every expert on every token with exact activations, then combines
+    with the routing gates: out[t] = Σ_k gate[t,k] · FFN_{expert[t,k]}(x[t]).
+    Invalid (dropped) assignments contribute nothing.  No capacity, no
+    dispatch buffer — the specification, not the algorithm.
+
+    x: (T, d); params: dict of expert weights; routing: core.routing.Routing.
+    """
+    from repro.core.gelu import get_activation
+
+    xf = x.astype(jnp.float32)
+    act = get_activation(
+        "silu" if cfg.expert_kind == "swiglu" else "gelu", use_lut=False)
+    if cfg.expert_kind == "swiglu":
+        g = jnp.einsum("td,edf->etf", xf, params["wg"].astype(jnp.float32))
+        u = jnp.einsum("td,edf->etf", xf, params["wu"].astype(jnp.float32))
+        y_all = jnp.einsum("etf,efd->etd", act(g) * u,
+                           params["wd"].astype(jnp.float32))
+    else:
+        h = jnp.einsum("td,edf->etf", xf, params["w1"].astype(jnp.float32))
+        h = h + params["b1"].astype(jnp.float32)[:, None, :]
+        h = act(h)
+        y_all = jnp.einsum("etf,efd->etd", h,
+                           params["w2"].astype(jnp.float32))
+        y_all = y_all + params["b2"].astype(jnp.float32)[:, None, :]
+    # routing.expert/gate/valid: (T, K)
+    wgt = jnp.where(routing.valid, routing.gate, 0.0).astype(jnp.float32)
+    picked = jnp.take_along_axis(
+        jnp.moveaxis(y_all, 0, 1),                 # (T, E, d)
+        routing.expert[..., None].astype(jnp.int32), axis=1)   # (T, K, d)
+    out = jnp.sum(picked * wgt[..., None], axis=1)
+    return out.astype(x.dtype)

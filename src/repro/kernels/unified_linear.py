@@ -26,6 +26,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.gelu import lut_correction
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["unified_linear_kernel", "unified_linear_call"]
 
 
@@ -35,13 +38,7 @@ def _epilogue(y, activation: str | None, use_lut: bool, table, step_log2: int):
     if activation == "relu":
         return jnp.maximum(y, 0.0)
     if use_lut:
-        n = table.shape[0]
-        ax = jnp.abs(y)
-        idx = jnp.round(ax * (2.0 ** (-step_log2))).astype(jnp.int32)
-        in_range = idx < n
-        idx = jnp.minimum(idx, n - 1)
-        delta = jnp.where(in_range, jnp.take(table, idx), 0.0)
-        return jnp.maximum(y, 0.0) - delta
+        return lut_correction(y, table, step_log2)
     if activation == "gelu":
         return y * 0.5 * (1.0 + jax.lax.erf(y / jnp.sqrt(2.0).astype(y.dtype)))
     if activation == "silu":
@@ -79,7 +76,7 @@ def unified_linear_call(
     block_m: int = 256,
     block_n: int = 256,
     block_k: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """Raw call on padded operands.  Use ``ops.unified_linear`` instead.
 
@@ -87,6 +84,7 @@ def unified_linear_call(
     M % block_m == N % block_n == K % block_k == 0 (wrapper pads; zero pads
     contribute 0 to the accumulator so no masking is needed).
     """
+    interpret = resolve_interpret(interpret)
     m, k = x.shape
     n = w.shape[1]
     nm, nn, nk = m // block_m, n // block_n, k // block_k

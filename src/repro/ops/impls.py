@@ -61,6 +61,19 @@ def _reject_qtensor(*arrays):
     return None
 
 
+def _reject_interpret(policy):
+    """Reason string when the policy demands compiled kernels but no TPU is
+    attached — the kernel impls must *reject* (recorded fallback) rather
+    than silently run the interpreter (the old ``interpret=True`` default
+    did the inverse: silently interpreted on real TPUs)."""
+    from repro.kernels.runtime import default_interpret
+
+    if policy.interpret is False and default_interpret():
+        return "policy requires compiled kernels (interpret=False) but no " \
+               "TPU backend is attached"
+    return None
+
+
 # ================================================================ activation
 
 
@@ -102,13 +115,14 @@ def _act_pallas_requires(policy, x, *, kind):
         return f"no LUT correction table for {kind!r} (gelu/silu only)"
     if not _floating(x):
         return f"non-float input dtype {jnp.asarray(x).dtype}"
-    return None
+    return _reject_interpret(policy)
 
 
 def _act_pallas(policy, tiles, x, *, kind):
     return kops.lut_activation(x, kind, step_log2=policy.lut_step_log2,
                                lut_range=policy.lut_range,
-                               block_rows=tiles.get("block_rows"))
+                               block_rows=tiles.get("block_rows"),
+                               interpret=policy.interpret)
 
 
 def _act_dims(x, *, kind):
@@ -121,7 +135,7 @@ register("activation", "lut", _act_lut, requires=_act_lut_requires,
          default=True,
          doc="ReLU − δ(|x|) half-table (§IV-C); gelu/silu only")
 register("activation", "pallas", _act_pallas, requires=_act_pallas_requires,
-         dims=_act_dims,
+         dims=_act_dims, kernel=True,
          doc="LUT kernel, VMEM-resident table; gelu/silu, float dtypes")
 
 
@@ -154,7 +168,7 @@ def _attn_pallas_requires(policy, q, k, v, *, causal=True, window=None,
         return f"non-float dtypes {q.dtype}/{k.dtype}"
     if q.shape[1] % k.shape[1] != 0:
         return f"Hq={q.shape[1]} not a multiple of Hkv={k.shape[1]}"
-    return None
+    return _reject_interpret(policy)
 
 
 def _attn_pallas(policy, tiles, q, k, v, *, causal=True, window=None,
@@ -162,7 +176,7 @@ def _attn_pallas(policy, tiles, q, k, v, *, causal=True, window=None,
     return kops.flash_attention(
         q, k, v, causal=causal, window=window, q_offset=int(q_offset),
         scale=scale, block_q=tiles.get("block_q"),
-        block_k=tiles.get("block_k"))
+        block_k=tiles.get("block_k"), interpret=policy.interpret)
 
 
 def _attn_ref(policy, tiles, q, k, v, **kw):
@@ -175,7 +189,7 @@ register("attention", "blocked", _attn_blocked, dims=_attn_dims,
 register("attention", "xla", _attn_xla,
          doc="materialized N×N scores (paper baseline), any mask")
 register("attention", "pallas", _attn_pallas,
-         requires=_attn_pallas_requires, dims=_attn_dims,
+         requires=_attn_pallas_requires, dims=_attn_dims, kernel=True,
          doc="tiled flash kernel; float dtypes, static q_offset, GQA-divisible heads")
 register("attention", "ref", _attn_ref,
          doc="pure-jnp oracle (f32 softmax, −inf masking)")
@@ -214,7 +228,7 @@ def _decode_pallas_requires(policy, q, k_cache, v_cache, cache_len, *,
     if arr.size > 1 and not (arr == arr[0]).all():
         return "per-sequence cache lengths differ (continuous batching " \
                "mixes decode positions)"
-    return None
+    return _reject_interpret(policy)
 
 
 def _decode_pallas(policy, tiles, q, k_cache, v_cache, cache_len, *,
@@ -229,7 +243,32 @@ def _decode_pallas(policy, tiles, q, k_cache, v_cache, cache_len, *,
     return kops.flash_attention(
         q, k_cache[:, :, :length], v_cache[:, :, :length], causal=True,
         window=window, q_offset=length - 1, scale=scale,
-        block_q=tiles.get("block_q"), block_k=tiles.get("block_k"))
+        block_q=tiles.get("block_q"), block_k=tiles.get("block_k"),
+        interpret=policy.interpret)
+
+
+def _decode_fused_requires(policy, q, k_cache, v_cache, cache_len, *,
+                           window=None, scale=None):
+    why = _reject_qtensor(q, k_cache, v_cache)
+    if why:
+        return why
+    if not _floating(q, k_cache, v_cache):
+        return f"non-float dtypes {q.dtype}/{k_cache.dtype}"
+    if q.shape[1] % k_cache.shape[1] != 0:
+        return f"Hq={q.shape[1]} not a multiple of Hkv={k_cache.shape[1]}"
+    return _reject_interpret(policy)
+
+
+def _decode_fused(policy, tiles, q, k_cache, v_cache, cache_len, *,
+                  window=None, scale=None):
+    # single-pass fused kernel: per-slot cache lengths ride in as scalar
+    # prefetch and are read at run time, so traced AND non-uniform decode
+    # positions (continuous batching) stay on the kernel — the capability
+    # the prefill-kernel reuse above lacks — and one compiled program
+    # serves every length.
+    return kops.fused_decode_attention(
+        q, k_cache, v_cache, cache_len, window=window, scale=scale,
+        block_k=tiles.get("block_k"), interpret=policy.interpret)
 
 
 def _decode_ref(policy, tiles, q, k_cache, v_cache, cache_len, *,
@@ -285,10 +324,15 @@ register("attention_decode", "xla", _decode_xla, default=True,
          doc="grouped-einsum single pass over the cache (M'×V ordering); "
              "vector per-slot cache_len")
 register("attention_decode", "pallas", _decode_pallas,
-         requires=_decode_pallas_requires, dims=_decode_dims,
+         requires=_decode_pallas_requires, dims=_decode_dims, kernel=True,
          doc="flash kernel over the live cache prefix; uniform concrete "
              "cache_len only (one compile per distinct length — batch "
              "evaluation, not eager decode loops)")
+register("attention_decode", "pallas_fused", _decode_fused,
+         requires=_decode_fused_requires, dims=_decode_dims, kernel=True,
+         doc="single-pass fused kernel, (m, s) carry + in-kernel Pass 3; "
+             "traced/non-uniform per-slot cache_len via scalar prefetch, "
+             "one compile for all lengths")
 register("attention_decode", "ref", _decode_ref,
          requires=_decode_fp_requires,
          doc="materialized-score oracle with cache_len masking")
@@ -338,7 +382,7 @@ def _linear_pallas_requires(policy, x, w, b=None, *, activation=None,
         return f"kernel epilogue has no {activation!r} fusion"
     if x.shape[-1] != w.shape[0]:
         return f"contraction mismatch {x.shape[-1]} vs {w.shape[0]}"
-    return None
+    return _reject_interpret(policy)
 
 
 def _linear_pallas(policy, tiles, x, w, b=None, *, activation=None,
@@ -351,7 +395,7 @@ def _linear_pallas(policy, tiles, x, w, b=None, *, activation=None,
         x, w, b, activation=activation, use_lut=use_lut,
         step_log2=policy.lut_step_log2, lut_range=policy.lut_range,
         block_m=tiles.get("block_m"), block_n=tiles.get("block_n"),
-        block_k=tiles.get("block_k"))
+        block_k=tiles.get("block_k"), interpret=policy.interpret)
     return y.astype(x.dtype)
 
 
@@ -403,7 +447,7 @@ register("linear", "xla", _linear_xla, default=True,
          doc="jnp.matmul, policy accum dtype + widened f32 bias, "
              "policy-dispatched activation epilogue")
 register("linear", "pallas", _linear_pallas,
-         requires=_linear_pallas_requires, dims=_linear_dims,
+         requires=_linear_pallas_requires, dims=_linear_dims, kernel=True,
          doc="blocked GEMM kernel, fused bias+(LUT) activation epilogue; "
              "float dtypes, relu/gelu/silu/none epilogues")
 register("linear", "ref", _linear_ref,
@@ -460,11 +504,23 @@ def _moe_fp_requires(policy, buf, w, group_sizes=None):
     return _reject_qtensor(buf, w)
 
 
+def _mask_queue_tails(y, group_sizes):
+    """Zero output rows at index >= group_sizes[e] — the grouped-GEMM output
+    contract (matches the kernel's in-kernel tail zeroing): padded queue
+    rows must come out exactly zero whatever the input tail held."""
+    if group_sizes is None:
+        return y
+    c = y.shape[1]
+    keep = jnp.arange(c)[None, :, None] < group_sizes[:, None, None]
+    return jnp.where(keep, y, jnp.zeros((), y.dtype))
+
+
 def _moe_xla(policy, tiles, buf, w, group_sizes=None):
     # dense sweep: empty experts are still computed (their rows are masked
     # by the combine); the metaqueue skip belongs to the kernel path.
-    return jnp.einsum("ecd,edf->ecf", buf, w,
-                      preferred_element_type=jnp.dtype(policy.accum_dtype))
+    y = jnp.einsum("ecd,edf->ecf", buf, w,
+                   preferred_element_type=jnp.dtype(policy.accum_dtype))
+    return _mask_queue_tails(y, group_sizes)
 
 
 def _moe_pallas_requires(policy, buf, w, group_sizes=None):
@@ -476,14 +532,15 @@ def _moe_pallas_requires(policy, buf, w, group_sizes=None):
                "per-expert queue lengths)"
     if not _floating(buf, w):
         return f"non-float dtypes {buf.dtype}/{w.dtype}"
-    return None
+    return _reject_interpret(policy)
 
 
 def _moe_pallas(policy, tiles, buf, w, group_sizes=None):
     return kops.moe_gemm(
         buf, w, group_sizes,
         block_c=tiles.get("block_c"), block_f=tiles.get("block_f"),
-        block_k=tiles.get("block_k")).astype(jnp.float32)
+        block_k=tiles.get("block_k"),
+        interpret=policy.interpret).astype(jnp.float32)
 
 
 def _moe_ref(policy, tiles, buf, w, group_sizes=None):
@@ -513,14 +570,14 @@ def _moe_int8(policy, tiles, buf, w, group_sizes=None):
     else:
         y = jnp.einsum("ecd,edf->ecf", buf, dequantize(w, acc),
                        preferred_element_type=acc)
-    return y
+    return _mask_queue_tails(y, group_sizes)
 
 
 register("moe_grouped_gemm", "xla", _moe_xla, default=True,
          requires=_moe_fp_requires,
          doc="dense ecd,edf einsum (f32 accum); computes empty experts")
 register("moe_grouped_gemm", "pallas", _moe_pallas,
-         requires=_moe_pallas_requires, dims=_moe_dims,
+         requires=_moe_pallas_requires, dims=_moe_dims, kernel=True,
          doc="grouped GEMM kernel with scalar-prefetch metaqueue skip; "
              "needs group_sizes, float dtypes")
 register("moe_grouped_gemm", "ref", _moe_ref,
@@ -549,7 +606,8 @@ def _moe_factored(policy, tiles, buf, w, group_sizes=None):
     # contraction runs over the feature axis only, so the summation order
     # per output element is independent of the wave's slot count — paged
     # waves stay bit-exact with the all-resident forward.
-    return factored_moe_gemm(buf, w, jnp.dtype(policy.accum_dtype))
+    y = factored_moe_gemm(buf, w, jnp.dtype(policy.accum_dtype))
+    return _mask_queue_tails(y, group_sizes)
 
 
 register("moe_grouped_gemm", "xla_int8", _moe_int8,
@@ -561,3 +619,108 @@ register("moe_grouped_gemm", "xla_factored", _moe_factored,
          doc="FactoredTensor expert weights: shared basis GEMM + "
              "per-expert low-rank/butterfly delta correction (optionally "
              "int8/int4 delta factors); fp queue buffers")
+
+
+# ================================================================== moe_ffn
+#
+# The whole routed expert layer as ONE logical op: dispatch (gather into
+# per-expert queues), every expert projection + activation, and the gate-
+# weighted combine.  The staged impl is the seed path (materialized
+# (E, C, d) buffer, three moe_grouped_gemm dispatches); the fused impl is
+# the Pallas megakernel where that buffer never exists.
+
+
+def _moe_ffn_dims(x, params, routing, group_sizes, *, cfg, capacity):
+    first = next(iter(params.values()))
+    return {"e": cfg.num_experts, "c": capacity, "d": x.shape[-1],
+            "f": first.shape[2] if hasattr(first, "shape") else cfg.d_ff,
+            "t": x.shape[0]}
+
+
+def _moe_ffn_xla(policy, tiles, x, params, routing, group_sizes, *,
+                 cfg, capacity):
+    # the staged reference pipeline, named-scope-compatible with the
+    # pre-op-ification apply_moe (roofline attribution keys on the scopes).
+    # Packed expert weights (QTensor / FactoredTensor) are fine: each inner
+    # projection re-dispatches moe_grouped_gemm, whose capability chain
+    # routes them to xla_int8 / xla_factored.
+    from repro.core import moe as moe_lib
+    from repro.core import routing as R
+    from repro.dist.sharding import constrain
+
+    with jax.named_scope("moe_dispatch"):
+        if cfg.impl == "onehot":
+            buf = R.dispatch_onehot(x, routing, cfg.num_experts, capacity)
+        else:
+            buf = R.dispatch(x, routing, cfg.num_experts, capacity)
+        # expert-parallel layout under an active mesh: the (E, C, d) buffer
+        # shards over the model axis, turning dispatch/combine into the
+        # token all-to-all (no-op without rules)
+        buf = constrain(buf, "ecd")
+    with jax.named_scope("moe_ffn"):
+        out = moe_lib._expert_ffn(params, cfg, buf, group_sizes)
+    with jax.named_scope("moe_combine"):
+        if cfg.impl == "onehot":
+            y = R.combine_onehot(out, routing)
+        else:
+            y = R.combine(out, routing)
+    return y.astype(x.dtype)
+
+
+def _moe_ffn_ref_requires(policy, x, params, routing, group_sizes, *,
+                          cfg, capacity):
+    return _reject_qtensor(x, *params.values())
+
+
+def _moe_ffn_ref(policy, tiles, x, params, routing, group_sizes, *,
+                 cfg, capacity):
+    return kref.ref_moe_ffn(x, params, routing, cfg=cfg)
+
+
+def _moe_ffn_fused_requires(policy, x, params, routing, group_sizes, *,
+                            cfg, capacity):
+    if cfg.impl == "onehot":
+        return "onehot (GSPMD) dispatch requested — the fused kernel " \
+               "replaces the gather path only"
+    if any(is_qtensor(p) for p in params.values()):
+        return "expert weights are quantized (QTensor) — staged path " \
+               "serves them via the xla_int8 grouped GEMM"
+    if any(is_factored(p) for p in params.values()):
+        return "expert weights are factored (FactoredTensor) — staged " \
+               "path serves them via the xla_factored grouped GEMM"
+    if not _floating(x):
+        return f"non-float activation dtype {jnp.asarray(x).dtype}"
+    from repro.dist.sharding import current_rules
+
+    rules = current_rules()
+    if rules is not None and rules.mesh is not None \
+            and "model" in rules.mesh.axis_names:
+        return "active mesh with a model axis — fused kernel is " \
+               "single-device (use the staged expert-parallel path)"
+    return _reject_interpret(policy)
+
+
+def _moe_ffn_fused(policy, tiles, x, params, routing, group_sizes, *,
+                   cfg, capacity):
+    use_lut = policy.lut_activations
+    return kops.fused_moe_ffn(
+        x, dict(params), routing.expert, routing.gate, routing.position,
+        routing.valid, group_sizes, kind=cfg.expert_kind, capacity=capacity,
+        use_lut=use_lut, step_log2=policy.lut_step_log2,
+        lut_range=policy.lut_range, block_c=tiles.get("block_c"),
+        interpret=policy.interpret)
+
+
+register("moe_ffn", "xla", _moe_ffn_xla, default=True,
+         doc="staged dispatch → grouped GEMMs → combine (materializes the "
+             "(E, C, d) buffer; inner GEMMs re-dispatch moe_grouped_gemm, "
+             "so packed weights and mesh layouts are served here)")
+register("moe_ffn", "pallas_fused", _moe_ffn_fused,
+         requires=_moe_ffn_fused_requires, dims=_moe_ffn_dims, kernel=True,
+         doc="megakernel: one-hot gather + expert MLP + weighted scatter "
+             "in one pass, scalar-prefetch metaqueue skip, no dispatch "
+             "buffer; fp weights, gather dispatch, single device")
+register("moe_ffn", "ref", _moe_ffn_ref, requires=_moe_ffn_ref_requires,
+         doc="token-level dense oracle: every expert on every token, "
+             "exact activations, gate-weighted sum (no capacity artifacts "
+             "beyond routing.valid)")

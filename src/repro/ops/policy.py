@@ -4,7 +4,8 @@ Edge-MoE's unified computing unit is one flexible module configured at run
 time; this module is the TPU-side analogue of that configuration word.  A
 :class:`ComputePolicy` names, for every logical op in the registry
 (``attention``, ``attention_decode``, ``linear``, ``moe_grouped_gemm``,
-``activation``), which registered implementation should serve it, plus the
+``moe_ffn``, ``activation``), which registered implementation should serve
+it, plus the
 numerics that used to be scattered booleans (accumulation dtype, widened
 f32 bias, LUT step/range) and optional per-op tile-size overrides.
 
@@ -38,7 +39,7 @@ __all__ = [
 # The logical ops of the unified compute unit.  Implementations register
 # against these names in ``repro.ops.impls``.
 OPS = ("attention", "attention_decode", "linear", "moe_grouped_gemm",
-       "activation")
+       "moe_ffn", "activation")
 
 
 def _freeze_impls(impls) -> tuple:
@@ -69,6 +70,12 @@ class ComputePolicy:
     ``accum_dtype`` / ``bias_f32`` — the paper's widened-accumulator /
                    widened-bias types (§IV-E) as a policy, not a flag.
     ``lut_step_log2`` / ``lut_range`` — §IV-C LUT geometry.
+    ``interpret`` — three-state Pallas execution mode (see
+                   ``kernels.runtime``): ``None`` auto (compiled on TPU,
+                   interpreter elsewhere), ``True`` force interpreter,
+                   ``False`` require compiled — off-TPU the kernel impls
+                   then *reject* with a recorded reason instead of
+                   silently interpreting.
     """
 
     impls: tuple = ()
@@ -78,6 +85,7 @@ class ComputePolicy:
     bias_f32: bool = True
     lut_step_log2: int = -8
     lut_range: float = 8.0
+    interpret: Optional[bool] = None
 
     def __post_init__(self):
         object.__setattr__(self, "impls", _freeze_impls(self.impls))
@@ -139,6 +147,12 @@ def policy_named(name: str) -> ComputePolicy:
                     seed default; paper techniques ①②③ without kernels).
     ``"pallas"``  — Pallas kernels for every op that has one (interpret
                     mode off-TPU), LUT activations in the fused epilogue.
+    ``"pallas_fused"`` — the megakernel tier: ``moe_ffn`` runs dispatch +
+                    grouped expert GEMMs + combine in ONE Pallas kernel
+                    (the (E, C, d) buffer never exists) and
+                    ``attention_decode`` runs the single-pass fused decode
+                    kernel; other ops keep the seed defaults (blocked
+                    attention, LUT activations).
     ``"ref"``     — the pure-jnp oracle impls (tests / numerics triage).
     ``"xla_int8"`` — quantized serving: the weight ops (``linear``,
                     ``moe_grouped_gemm``) and the KV decode run the
@@ -168,6 +182,11 @@ def policy_named(name: str) -> ComputePolicy:
                                     ("attention", "blocked")))
     if name == "pallas":
         return ComputePolicy(default_impl="pallas")
+    if name == "pallas_fused":
+        return ComputePolicy(impls=(("activation", "lut"),
+                                    ("attention", "blocked"),
+                                    ("moe_ffn", "pallas_fused"),
+                                    ("attention_decode", "pallas_fused")))
     if name == "ref":
         return ComputePolicy(default_impl="ref")
     if name == "xla_int8":
@@ -178,8 +197,8 @@ def policy_named(name: str) -> ComputePolicy:
         return ComputePolicy(impls=(
             ("moe_grouped_gemm", "xla_factored"),))
     raise ValueError(f"unknown policy preset: {name!r} "
-                     "(expected xla | blocked | pallas | ref | xla_int8 | "
-                     "xla_factored)")
+                     "(expected xla | blocked | pallas | pallas_fused | ref | "
+                     "xla_int8 | xla_factored)")
 
 
 # ------------------------------------------------------------ ambient scope

@@ -57,14 +57,17 @@ class OpImpl:
     dims: Optional[Callable] = None         # (*a, **kw) -> bucketing dims
     default: bool = False
     doc: str = ""                           # capability summary (README/CI)
+    kernel: bool = False                    # Pallas impl: record exec mode
 
 
 _REGISTRY: dict[str, dict[str, OpImpl]] = {}
 _DEFAULTS: dict[str, str] = {}
 _LOCK = threading.Lock()
 
-# (op, requested, used, reasons) -> count.  ``reasons`` is a tuple of
-# "impl: why it was rejected" strings, empty for a direct hit.
+# (op, requested, used, reasons, mode) -> count.  ``reasons`` is a tuple of
+# "impl: why it was rejected" strings, empty for a direct hit.  ``mode`` is
+# "interpret"/"compiled" for kernel impls (which Pallas execution mode the
+# dispatch actually ran in) and "" for plain-jnp impls.
 _COUNTS: Counter = Counter()
 _IMPLS_LOADED = False
 
@@ -72,10 +75,11 @@ _IMPLS_LOADED = False
 def register(op: str, name: str, fn: Callable, *,
              requires: Optional[Callable] = None,
              dims: Optional[Callable] = None,
-             default: bool = False, doc: str = "") -> OpImpl:
+             default: bool = False, doc: str = "",
+             kernel: bool = False) -> OpImpl:
     """Register implementation ``name`` for logical op ``op``."""
     impl = OpImpl(op=op, name=name, fn=fn, requires=requires, dims=dims,
-                  default=default, doc=doc)
+                  default=default, doc=doc, kernel=kernel)
     with _LOCK:
         table = _REGISTRY.setdefault(op, {})
         table[name] = impl
@@ -153,8 +157,13 @@ def dispatch(op: str, *args, **kwargs):
         if why is not None:
             reasons.append(f"{name}: {why}")
             continue
+        mode = ""
+        if impl.kernel:
+            from repro.kernels.runtime import interpret_mode_name
+
+            mode = interpret_mode_name(policy.interpret)
         with _LOCK:
-            _COUNTS[(op, requested, name, tuple(reasons))] += 1
+            _COUNTS[(op, requested, name, tuple(reasons), mode)] += 1
         tiles = {}
         if impl.dims is not None:
             tiles = schedule_for(op, name, impl.dims(*args, **kwargs))
@@ -173,7 +182,12 @@ def dispatch_report() -> dict:
 
     {op: {"requests": N,
           "hits": {impl: n},                     # policy impl served it
-          "fallbacks": [{"requested", "used", "reasons", "count"}, ...]}}
+          "fallbacks": [{"requested", "used", "reasons", "count"}, ...],
+          "modes": {impl: {"interpret"|"compiled": n}}}}   # kernel impls
+
+    ``modes`` records, for every Pallas kernel impl that served a dispatch,
+    which execution mode it ran in (the bugfix for the silent
+    interpret-on-TPU default — the mode is now observable).
 
     Counts tick at trace time: one entry per jitted specialization, re-used
     by every execution of that compiled graph.
@@ -181,9 +195,9 @@ def dispatch_report() -> dict:
     with _LOCK:
         items = list(_COUNTS.items())
     report: dict = {}
-    for (op, requested, used, reasons), n in sorted(items):
+    for (op, requested, used, reasons, mode), n in sorted(items):
         entry = report.setdefault(op, {"requests": 0, "hits": {},
-                                       "fallbacks": []})
+                                       "fallbacks": [], "modes": {}})
         entry["requests"] += n
         if used == requested:
             entry["hits"][used] = entry["hits"].get(used, 0) + n
@@ -192,6 +206,9 @@ def dispatch_report() -> dict:
                 "requested": requested, "used": used,
                 "reasons": list(reasons), "count": n,
             })
+        if mode:
+            m = entry["modes"].setdefault(used, {})
+            m[mode] = m.get(mode, 0) + n
     return report
 
 

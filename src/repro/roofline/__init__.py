@@ -4,6 +4,12 @@ from repro.roofline.analysis import (
     collective_bytes_from_hlo,
     model_flops,
 )
+from repro.roofline.moe_traffic import (
+    fused_moe_bytes,
+    moe_traffic_report,
+    staged_moe_bytes,
+)
 
 __all__ = ["RooflineReport", "analyze_compiled", "collective_bytes_from_hlo",
-           "model_flops"]
+           "model_flops", "staged_moe_bytes", "fused_moe_bytes",
+           "moe_traffic_report"]
