@@ -44,8 +44,23 @@ from jax.sharding import PartitionSpec as P
 __all__ = [
     "ShardingRules", "use_rules", "current_rules", "constrain",
     "param_sharding_rules", "batch_sharding", "opt_state_shardings",
-    "_trim_spec",
+    "ep_dispatch_sharding", "_trim_spec",
 ]
+
+
+def ep_dispatch_sharding(mesh, axis: str = "model") -> NamedSharding:
+    """Sharding for the slot-major ``(S, C, d)`` expert dispatch buffer.
+
+    ``S`` is shard-contiguous: slot ``s*R + r`` lives in shard ``s``'s
+    bank, so partitioning the leading dim over the expert-parallel axis
+    keeps every slot's dispatch rows on the device that holds its
+    weights — and the one-hot dispatch/combine einsums lower to the
+    token all-to-all.  Replica-aware by construction: a replicated
+    expert occupies one slot PER shard, so its split token streams land
+    on their own shards with no extra collectives, however many replicas
+    the placement plan assigns.
+    """
+    return NamedSharding(mesh, P(axis, None, None))
 
 
 # ------------------------------------------------------------ spec trimming
@@ -156,6 +171,9 @@ class ShardingRules:
             # tensor axis — the one-hot dispatch/combine einsums then lower
             # to the token all-to-all (experts stay resident, tokens move)
             "ecd": P(tp, None, None),
+            # paged-serving slot dispatch buffers (S, C, d): same layout,
+            # S = shard-contiguous slot banks (see ep_dispatch_sharding)
+            "scd": P(tp, None, None),
         }
 
         param_patterns = (

@@ -217,7 +217,8 @@ def _serve_scheduler_vision(cfg, args, rules=None) -> int:
                             or None,
                             rules=rules, async_paging=args.async_paging,
                             factor=_factor_spec(args) if args.factor
-                            else None)
+                            else None,
+                            placement=args.placement)
     sched = Scheduler(backend, total_slots=args.batch, quantum=1,
                       num_tasks=len(MV.TASKS))
     imgs = np.asarray(jax.random.normal(
@@ -238,6 +239,16 @@ def _serve_scheduler_vision(cfg, args, rules=None) -> int:
               f"stall {cache.get('stall_s', 0.0)*1e3:.1f}ms, "
               f"hidden {cache.get('hidden_s', 0.0)*1e3:.1f}ms, "
               f"overlap_ratio {cache.get('overlap_ratio', 1.0):.2f}")
+    pl = m.get("placement")
+    if pl is not None:
+        load = ", ".join(f"{v:.0f}" for v in (m.get("shard_load") or []))
+        print(f"[serve] placement {pl['policy']}: "
+              f"generation {pl['generation']}, "
+              f"plan_swaps {pl['plan_swaps']}, "
+              f"migrations {pl['migrations']}, "
+              f"replications {pl['replications']}, "
+              f"shard_load [{load}] "
+              f"(imbalance {m.get('shard_load_imbalance', 0.0):.2f})")
     return 0
 
 
@@ -287,6 +298,13 @@ def main() -> int:
                          "sharded over data, tensor/expert parallelism "
                          "over model.  Off-TPU this forces DxM host "
                          "(CPU) devices before jax init")
+    ap.add_argument("--placement", default="static",
+                    choices=["static", "lru", "budget", "elastic"],
+                    help="vision scheduler: expert placement policy — "
+                         "'static' is the fixed modulo partition; "
+                         "'elastic' replicates usage-hot experts across "
+                         "mesh shards and migrates cold ownership live "
+                         "(bit-exact; needs --mesh with model > 1)")
     ap.add_argument("--expert-budget-bytes", type=int, default=0,
                     help="vision scheduler: per-device expert-weight byte "
                          "budget (0 = use --resident-fraction); each mesh "

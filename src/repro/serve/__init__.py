@@ -1,6 +1,8 @@
 from repro.serve.engine import ServeConfig, ServingEngine
 from repro.serve.expert_cache import (ExpertCache, ExpertUsage, PagedMoE,
                                       ShardedExpertCache)
+from repro.serve.placement import (ElasticPolicy, PlacementPlan,
+                                   PlacementPolicy, get_policy)
 from repro.serve.scheduler import LMBackend, Request, Scheduler
 from repro.serve.slo import (RadixPrefixCache, SLOPolicy, SlotParker,
                              TierSpec, TraceConfig, TraceGenerator)
@@ -10,6 +12,7 @@ from repro.serve.transfer import (FakeTransferEngine, TransferEngine,
 __all__ = [
     "ServeConfig", "ServingEngine",
     "ExpertCache", "ExpertUsage", "PagedMoE", "ShardedExpertCache",
+    "PlacementPlan", "PlacementPolicy", "ElasticPolicy", "get_policy",
     "LMBackend", "Request", "Scheduler",
     "RadixPrefixCache", "SLOPolicy", "SlotParker", "TierSpec",
     "TraceConfig", "TraceGenerator",

@@ -47,8 +47,10 @@ from repro.core import routing as R
 from repro.core.moe import (MoEConfig, _expert_ffn, expert_param_names,
                             group_shape)
 from repro.core.unified_linear import unified_linear
+from repro.dist.sharding import ep_dispatch_sharding
 from repro.factor import FactoredTensor, is_factored
 from repro.quant import QTensor, is_qtensor
+from repro.serve.placement import PlacementPlan, PlacementPolicy, get_policy
 from repro.serve.transfer import Transfer
 
 __all__ = ["ExpertUsage", "ExpertCache", "ShardedExpertCache", "PagedMoE"]
@@ -92,9 +94,14 @@ class ExpertUsage:
         self.totals[task_id] += c.astype(np.int64)
 
     def hot(self, k: int, task_id: Optional[int] = None) -> list[int]:
-        """Top-k expert ids by EMA usage (one task, or summed over tasks)."""
+        """Top-k expert ids by EMA usage (one task, or summed over tasks).
+
+        Ties break by expert id, EXPLICITLY (lexsort keys, not argsort
+        order): prefetch ranking and elastic placement both consume this
+        list, and both must be deterministic across platforms."""
         v = self.ema[task_id] if task_id is not None else self.ema.sum(axis=0)
-        return [int(e) for e in np.argsort(-v, kind="stable")[:k]]
+        order = np.lexsort((np.arange(v.size), -v))
+        return [int(e) for e in order[:k]]
 
     def task_overlap(self) -> float:
         """Mean pairwise cosine similarity of per-task usage — low values
@@ -135,9 +142,13 @@ class ExpertCache:
                  usage: Optional[ExpertUsage] = None,
                  write_cb: Optional[Callable[[int, dict], None]] = None,
                  transfer_engine=None, label: str = "cache",
-                 pinned: Optional[dict] = None):
+                 pinned: Optional[dict] = None,
+                 policy: Optional[PlacementPolicy] = None):
         if not host:
             raise ValueError("empty expert weight store")
+        # all residency DECISIONS (victim pick, prefetch ranking) live in
+        # the policy; this class is mechanism — slots, copies, commits
+        self.policy = policy if policy is not None else get_policy("static")
         # pinned leaves (e.g. a factored layer's shared basis) are put on
         # device ONCE here and never enter the slot store, LRU, or paging
         # byte accounting — they have no per-expert axis
@@ -275,14 +286,15 @@ class ExpertCache:
 
     def _reserve_slot(self, pinned: set[int]) -> int:
         """Claim a slot for a new occupant: first free slot, else evict the
-        LRU expert not in ``pinned``.  Evicting an expert whose prefetch is
-        still in flight CANCELS the transfer — the copy never committed, so
-        the slot's next occupant cannot be clobbered by a late completion
-        (the double-buffer slot-reuse ordering contract)."""
+        policy's victim (LRU-not-in-working-set for every stock policy).
+        Evicting an expert whose prefetch is still in flight CANCELS the
+        transfer — the copy never committed, so the slot's next occupant
+        cannot be clobbered by a late completion (the double-buffer
+        slot-reuse ordering contract)."""
         free = [s for s, e in enumerate(self._slot_expert) if e < 0]
         if free:
             return free[0]
-        victim = next(e for e in self._lru if e not in pinned)
+        victim = self.policy.victim(self._lru, pinned)
         slot = self._lru.pop(victim)
         self._slot_expert[slot] = -1
         self.evictions += 1
@@ -314,18 +326,19 @@ class ExpertCache:
         slot = self._reserve_slot(pinned)
         new = self._host_rows(expert)
         if self.engine is not None:
-            tr = self.engine.submit((self.label, expert), new)
+            tr = self.engine.submit((self.label, expert), new, tag="demand")
             new = self.engine.fence(tr)
         self._commit(expert, slot, new)
 
-    def _submit_async(self, expert: int, pinned: set[int]) -> Transfer:
+    def _submit_async(self, expert: int, pinned: set[int],
+                      tag: str = "demand") -> Transfer:
         """Reserve a slot and start a non-blocking copy for ``expert``.
         The slot is RESERVED (``_slot_expert``/``_lru`` claim it so LRU
         ordering and wave planning see it coming) but the store is not
         touched until the transfer is fenced and committed."""
         slot = self._reserve_slot(pinned)
         tr = self.engine.submit((self.label, expert),
-                                self._host_rows(expert))
+                                self._host_rows(expert), tag=tag)
         self._inflight[expert] = (slot, tr)
         self._slot_expert[slot] = expert
         self._lru[expert] = slot
@@ -465,7 +478,7 @@ class ExpertCache:
         (``prefetch_truncated`` / ``prefetch_dropped``, bounded deque)."""
         self.ensure(self._truncate_prefetch(expert_ids), record=False)
 
-    def prefetch_async(self, expert_ids) -> list[int]:
+    def prefetch_async(self, expert_ids, tag: str = "prefetch") -> list[int]:
         """Router-lookahead warm-up: SUBMIT non-blocking copies for the
         given ids and return immediately (no fence — the copies ride
         behind whatever compute runs next; ``ensure`` fences them at the
@@ -481,10 +494,26 @@ class ExpertCache:
             if e in self._lru:              # resident or already in flight
                 self._lru.move_to_end(e)
                 continue
-            self._submit_async(e, pinned)
+            self._submit_async(e, pinned, tag=tag)
             self.async_prefetches += 1
             submitted.append(e)
         return submitted
+
+    def drop(self, expert: int) -> bool:
+        """Release ``expert``'s slot, if it holds one (an in-flight copy
+        is cancelled).  This is a PLACEMENT drop — ownership moved to
+        another shard — not a capacity eviction, so it does not touch the
+        eviction counter.  Returns True when a slot was freed."""
+        e = int(expert)
+        slot = self._lru.pop(e, None)
+        if slot is None:
+            return False
+        self._slot_expert[slot] = -1
+        vt = self._inflight.pop(e, None)
+        if vt is not None:
+            self.engine.cancel(vt[1])
+            self.async_cancelled += 1
+        return True
 
     def fence_all(self) -> None:
         """Commit every outstanding in-flight transfer (a full barrier —
@@ -510,32 +539,55 @@ class ExpertCache:
                 m[e] = s
         return m
 
+    def replica_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Replica-aware remap: ``(table, counts)`` where ``table`` is
+        (E, W) int32 slot ids (−1 padded) and ``counts`` is (E,) int32
+        resident-replica counts.  A single-device cache never replicates:
+        W = 1 and counts is the residency indicator — the wave dispatch's
+        ``position % counts`` load split degenerates to the identity."""
+        remap = self.remap()
+        return remap[:, None], (remap >= 0).astype(np.int32)
+
 
 class ShardedExpertCache:
-    """Expert-parallel residency: experts partitioned over a mesh axis.
+    """Expert-parallel residency: experts placed over a mesh axis by a
+    :class:`~repro.serve.placement.plan.PlacementPlan`.
 
-    Shard ``s`` of ``m`` owns experts ``[s*E/m, (s+1)*E/m)`` and a bounded
-    bank of ``max_resident`` device slots for them.  The device store is
-    ONE stacked ``(m, R, ...)`` array per weight name, sharded over
-    ``axis`` — shard s's bank physically lives on shard s, and a page-in
-    writes only that shard's partition.  Bookkeeping (LRU, hit/miss/bytes,
-    prefetch-truncation accounting) is one :class:`ExpertCache` per shard
-    in external-write mode, so the single-device semantics — including the
-    ``-1`` non-resident sentinel — carry over per shard.
+    Shard ``s`` of ``m`` holds a bounded bank of ``max_resident`` device
+    slots and serves the experts the PLAN assigns it — under the default
+    static plan that is the contiguous block ``[s*E/m, (s+1)*E/m)``,
+    bit-for-bit the old modulo partition; an elastic plan may migrate a
+    cold expert's home shard or replicate a hot expert across several.
+    The device store is ONE stacked ``(m, R, ...)`` array per weight
+    name, sharded over ``axis`` — shard s's bank physically lives on
+    shard s, and a page-in writes only that shard's partition.
+    Bookkeeping (LRU, hit/miss/bytes, prefetch-truncation accounting) is
+    one :class:`ExpertCache` per shard in external-write mode, keyed by
+    GLOBAL expert id (transfer keys are ``("shard<s>", expert)``), so the
+    single-device semantics — including the ``-1`` non-resident sentinel —
+    carry over per shard and an expert can hold a slot on several shards
+    at once.
 
     A fixed per-device slot budget therefore holds ``m × R`` resident
     experts in aggregate: residency scales linearly with the shard count.
+    Plan swaps (:meth:`set_plan`) happen between forwards: moved-away
+    residency is dropped, new homes stream in through the transfer engine
+    (tagged ``migrate``) behind the next forward's compute, and the
+    generation counter guarantees no wave observes a half-applied plan.
     """
 
     def __init__(self, host: dict[str, np.ndarray], max_resident: int,
                  mesh, axis: str = "model",
                  usage: Optional[ExpertUsage] = None,
-                 transfer_engine=None, pinned: Optional[dict] = None):
+                 transfer_engine=None, pinned: Optional[dict] = None,
+                 policy: Optional[PlacementPolicy] = None,
+                 plan: Optional[PlacementPlan] = None):
         if not host:
             raise ValueError("empty expert weight store")
         self.mesh = mesh
         self.axis = axis
         self.engine = transfer_engine
+        self.policy = policy if policy is not None else get_policy("static")
         # pinned leaves are REPLICATED over the mesh (every shard computes
         # its experts' waves against the same shared basis) — each device
         # pays the pinned bytes once, like the single-device cache
@@ -557,10 +609,31 @@ class ShardedExpertCache:
                 f"E={self.num_experts} does not divide the {m}-way "
                 f"{axis!r} axis")
         self.e_local = self.num_experts // m
-        self.max_resident = max(1, min(int(max_resident), self.e_local))
+        self.plan = plan if plan is not None \
+            else self.policy.initial_plan(self.num_experts, m)
+        if (self.plan.num_experts, self.plan.num_shards) \
+                != (self.num_experts, m):
+            raise ValueError(
+                f"plan is ({self.plan.num_experts} experts, "
+                f"{self.plan.num_shards} shards); cache has "
+                f"({self.num_experts}, {m})")
+        # replica-table width is FIXED by the policy at construction (1
+        # for static, m for elastic): later plan swaps must never change
+        # a jit-traced shape.  A width-1 bank never holds more than the
+        # shard's static share; a replicating bank may hold up to E.
+        self.table_width = max(1, min(int(self.policy.table_width(m)), m))
+        cap = self.e_local if self.table_width == 1 else self.num_experts
+        self.max_resident = max(1, min(int(max_resident), cap))
         rs = self.max_resident
         self.names = tuple(host)
         self.usage = usage
+        # per-shard routed-token load (replicated experts split theirs
+        # evenly) — the imbalance evidence the elastic policy consumes
+        self.shard_load = np.zeros(m, np.float64)
+        self.plan_swaps = 0
+        self.migrations = 0        # replica additions from plan swaps
+        self.migration_drops = 0   # residency released by plan swaps
+        self.replications = 0      # experts whose replica count grew
         # stacked sharded slot store: (m, R, ...) over the expert axis
         self.slots = {
             n: jax.device_put(
@@ -574,19 +647,21 @@ class ShardedExpertCache:
                 n: slots[n].at[s, r].set(new[n]) for n in slots},
             donate_argnums=(0,), out_shardings=out_sh)
 
-        def _book(s: int) -> ExpertCache:
-            lo = s * self.e_local
-            local = {n: np.asarray(w)[lo:lo + self.e_local]
-                     for n, w in host.items()}
+        # every book sees the FULL host store and keys by GLOBAL expert
+        # id — which experts a shard may page is the plan's decision, not
+        # baked into the book's address space (the pre-placement code
+        # sliced ``host`` here, freezing the modulo partition in)
+        full = {n: np.asarray(w) for n, w in host.items()}
 
+        def _book(s: int) -> ExpertCache:
             def write_cb(slot, new, _s=s):
                 dev = {n: jax.device_put(v) for n, v in new.items()}
                 self.slots = self._write(self.slots, dev,
                                          jnp.int32(_s), jnp.int32(slot))
 
-            return ExpertCache(local, rs, write_cb=write_cb,
+            return ExpertCache(full, rs, write_cb=write_cb,
                                transfer_engine=transfer_engine,
-                               label=f"shard{s}")
+                               label=f"shard{s}", policy=self.policy)
 
         self.books = [_book(s) for s in range(m)]
         self._expert_bytes = self.books[0]._expert_bytes
@@ -598,14 +673,18 @@ class ShardedExpertCache:
         return self.num_shards * self.max_resident
 
     def owner(self, expert: int) -> int:
-        return int(expert) // self.e_local
+        """Primary home shard of ``expert`` — the plan's call (static
+        plan: ``expert // e_local``, the historical modulo map)."""
+        return self.plan.owner(expert)
 
     @property
     def resident(self) -> list[int]:
-        out = []
-        for s, book in enumerate(self.books):
-            out.extend(s * self.e_local + e for e in book.resident)
-        return out
+        """Global ids holding a slot on ANY shard (deduplicated — a
+        replicated expert is listed once)."""
+        out: dict[int, None] = {}
+        for book in self.books:
+            out.update(dict.fromkeys(book.resident))
+        return list(out)
 
     def _sum(self, attr: str) -> int:
         return sum(getattr(b, attr) for b in self.books)
@@ -625,6 +704,29 @@ class ShardedExpertCache:
     def reset_stats(self) -> None:
         for b in self.books:
             b.reset_stats()
+        # placement event counters (plan_swaps/migrations/replications)
+        # are CUMULATIVE — they describe the plan's history, not an
+        # interval; only the per-interval load evidence resets
+        self.shard_load[:] = 0.0
+
+    def record_load(self, per_expert_counts) -> None:
+        """Fold one forward's routed-token counts into the per-shard load
+        ledger: an expert's tokens land on its plan shards (replicas
+        split evenly — exactly how the wave dispatch splits them)."""
+        c = np.asarray(per_expert_counts, np.float64).reshape(-1)
+        for e in np.nonzero(c)[0]:
+            shards = self.plan.shards_of(int(e))
+            share = c[e] / len(shards)
+            for s in shards:
+                self.shard_load[s] += share
+
+    def shard_load_imbalance(self) -> float:
+        """max/mean of per-shard routed load (1.0 = perfectly even, m =
+        everything on one shard); 0.0 before any load is recorded."""
+        tot = float(self.shard_load.sum())
+        if tot <= 0:
+            return 0.0
+        return float(self.shard_load.max() * self.num_shards / tot)
 
     def stats(self) -> dict[str, Any]:
         out = {
@@ -638,6 +740,18 @@ class ShardedExpertCache:
             "prefetch_truncated": self.prefetch_truncated,
             "paged_expert_bytes": self._expert_bytes,
             "pinned_bytes": self.pinned_bytes,       # per device (replicated)
+            "shard_load": [float(v) for v in self.shard_load],
+            "shard_load_imbalance": self.shard_load_imbalance(),
+            "placement": {
+                "policy": self.policy.name,
+                "generation": self.plan.generation,
+                "plan_swaps": self.plan_swaps,
+                "migrations": self.migrations,
+                "migration_drops": self.migration_drops,
+                "replications": self.replications,
+                "max_replicas": self.plan.max_replicas,
+                "table_width": self.table_width,
+            },
         }
         if self.engine is not None:
             out.update({
@@ -649,16 +763,19 @@ class ShardedExpertCache:
                 # once here, not per book (no double counting)
                 "stall_s": self.engine.stats.stall_s,
                 "overlap_ratio": self.engine.stats.overlap_ratio,
+                "transfer_tags": self.engine.stats.tags_dict(),
             })
         return out
 
     # ------------------------------------------------------------- paging
 
     def _by_shard(self, expert_ids) -> dict[int, list[int]]:
+        """Fan global ids out to the plan's shards (GLOBAL ids per shard;
+        a replicated expert appears in several shards' lists)."""
         by: dict[int, list[int]] = {}
         for e in expert_ids:
-            by.setdefault(self.owner(e), []).append(
-                int(e) % self.e_local)
+            for s in self.plan.shards_of(int(e)):
+                by.setdefault(s, []).append(int(e))
         return by
 
     def ensure(self, expert_ids, record: bool = True) -> None:
@@ -685,30 +802,95 @@ class ShardedExpertCache:
         for s, local in self._by_shard(expert_ids).items():
             self.books[s].prefetch(local)
 
-    def prefetch_async(self, expert_ids) -> list[int]:
+    def prefetch_async(self, expert_ids, tag: str = "prefetch") -> list[int]:
         """Submit non-blocking copies of each shard's share of
-        ``expert_ids``; returns the GLOBAL ids actually submitted."""
+        ``expert_ids``; returns the GLOBAL ids actually submitted (a
+        replicated expert is listed once per submitting shard)."""
         submitted = []
-        for s, local in self._by_shard(expert_ids).items():
-            submitted.extend(s * self.e_local + e
-                             for e in self.books[s].prefetch_async(local))
+        for s, ids in self._by_shard(expert_ids).items():
+            submitted.extend(self.books[s].prefetch_async(ids, tag=tag))
         return submitted
 
     def fence_all(self) -> None:
         for b in self.books:
             b.fence_all()
 
+    # ---------------------------------------------------------- placement
+
+    def set_plan(self, new_plan: PlacementPlan) -> None:
+        """Install a rebalanced plan ATOMICALLY between forwards.
+
+        Residency on shards the new plan removed is dropped (in-flight
+        copies cancelled — the double-buffer slot-reuse contract), and
+        page-ins for newly assigned homes are submitted through the
+        transfer engine tagged ``migrate``, so they stream behind the
+        next forward's compute; without an engine the next wave's
+        ``ensure`` demand-pages them.  Callers never see a half-applied
+        plan: this method runs only between forwards, and the generation
+        bump makes each swap observable exactly once.
+        """
+        if (new_plan.num_experts, new_plan.num_shards) \
+                != (self.num_experts, self.num_shards):
+            raise ValueError("plan shape does not match cache")
+        if new_plan.generation <= self.plan.generation:
+            raise ValueError(
+                f"plan generation must advance: {new_plan.generation} <= "
+                f"{self.plan.generation}")
+        if new_plan.max_replicas > self.table_width:
+            raise ValueError(
+                f"plan replicates {new_plan.max_replicas}-way but the "
+                f"replica table is {self.table_width} wide")
+        old = self.plan
+        added: dict[int, list[int]] = {}
+        for e in range(self.num_experts):
+            before = set(old.shards_of(e))
+            after = set(new_plan.shards_of(e))
+            for s in before - after:
+                if self.books[s].drop(e):
+                    self.migration_drops += 1
+            for s in after - before:
+                added.setdefault(s, []).append(e)
+            if len(after) > len(before):
+                self.replications += 1
+        self.plan = new_plan
+        self.plan_swaps += 1
+        self.migrations += sum(len(v) for v in added.values())
+        if self.engine is not None:
+            for s, ids in added.items():
+                self.books[s].prefetch_async(ids, tag="migrate")
+
     def remap(self) -> np.ndarray:
         """(E,) int32: expert id -> GLOBAL slot index ``shard*R + slot``
-        into the flattened ``(m*R, ...)`` view of the stacked store; ``-1``
-        for non-resident (same sentinel contract as ``ExpertCache``)."""
-        out = np.full((self.num_experts,), -1, np.int32)
-        for s, book in enumerate(self.books):
-            local = book.remap()
-            mask = local >= 0
-            out[s * self.e_local + np.nonzero(mask)[0]] = \
-                s * self.max_resident + local[mask]
-        return out
+        of the PRIMARY resident replica, in the flattened ``(m*R, ...)``
+        view of the stacked store; ``-1`` for non-resident (same sentinel
+        contract as ``ExpertCache``)."""
+        table, counts = self.replica_table()
+        return np.where(counts > 0, table[:, 0], -1).astype(np.int32)
+
+    def replica_table(self) -> tuple[np.ndarray, np.ndarray]:
+        """Replica-aware remap: ``(table, counts)``.
+
+        ``table`` is (E, W) int32 — resident replicas' global slot ids
+        ``shard*R + slot`` in plan order (primary first), −1 padded;
+        ``counts`` is (E,) int32 resident-replica counts.  The wave
+        dispatch splits an expert's tokens round-robin over its first
+        ``counts[e]`` columns (``position % counts``) — with one replica
+        everywhere this is exactly the historical ``remap()`` indexing.
+        """
+        books = [b.remap() for b in self.books]
+        table = np.full((self.num_experts, self.table_width), -1, np.int32)
+        counts = np.zeros(self.num_experts, np.int32)
+        for e in range(self.num_experts):
+            k = 0
+            for s in self.plan.shards_of(e):
+                if k >= self.table_width:
+                    break
+                slot = books[s][e]
+                if slot >= 0:
+                    table[e, k] = s * self.max_resident + slot
+                    k += 1
+            counts[e] = k
+        return table, counts
 
 
 class PagedMoE:
@@ -730,7 +912,8 @@ class PagedMoE:
                  usage_decay: float = 0.9,
                  budget_bytes: Optional[int] = None,
                  mesh=None, ep_axis: str = "model",
-                 transfer_engine=None):
+                 transfer_engine=None,
+                 placement=None):
         if cfg.impl not in ("grouped", "onehot"):
             raise ValueError(
                 "PagedMoE pages the grouped/onehot expert paths (ep_local "
@@ -793,25 +976,29 @@ class PagedMoE:
         pinned_total = _pinned_bytes(pinned)
         shards = int(self.mesh.shape[ep_axis]) if self.mesh is not None else 1
         e_per_shard = cfg.num_experts // shards
-        if budget_bytes is not None:
-            # device budget in bytes -> resident slots PER DEVICE (≥ top_k
-            # on a single device so one wave can always serve a token's
-            # full expert set; per-shard banks only need ≥ 1 — waves
-            # accumulate into disjoint rows, so splitting never hurts).
-            # Pinned leaves are paid out of the budget FIRST (they are on
-            # device whether or not any expert is resident); only the
-            # remainder buys slots, priced at the PAGED per-expert bytes —
-            # heterogeneous leaves must not inflate the slot cost.
-            floor = cfg.top_k if shards == 1 else 1
-            paged_budget = max(0, int(budget_bytes) - pinned_total)
-            max_resident = max(floor, paged_budget // max(per_expert, 1))
+        # residency decisions live in the placement policy: ``placement``
+        # is a name ("static"/"lru"/"budget"/"elastic") or a constructed
+        # PlacementPolicy.  A bare ``budget_bytes`` keeps its historical
+        # meaning by resolving to the budget policy; an explicit policy
+        # without its own budget inherits the argument.
+        if isinstance(placement, PlacementPolicy):
+            self.policy = placement
+        elif placement in (None, "static") and budget_bytes is not None:
+            self.policy = get_policy("budget", budget_bytes=budget_bytes)
         else:
-            # resident_fraction is a per-shard fraction of the shard's
-            # owned experts — the same fraction at any mesh size
-            floor = cfg.top_k if shards == 1 else 1
-            max_resident = max(floor,
-                               int(np.ceil(resident_fraction
-                                           * e_per_shard)))
+            self.policy = get_policy(placement)
+        if budget_bytes is not None and self.policy.budget_bytes is None:
+            self.policy.budget_bytes = int(budget_bytes)
+        # slot sizing is the policy's call too (extracted byte-budget /
+        # fraction arithmetic): ≥ top_k on a single device so one wave can
+        # always serve a token's full expert set; per-shard banks only
+        # need ≥ 1 — waves accumulate into disjoint rows, so splitting
+        # never hurts
+        floor = cfg.top_k if shards == 1 else 1
+        max_resident = self.policy.slots(
+            per_expert_bytes=per_expert, pinned_bytes=pinned_total,
+            experts_per_shard=e_per_shard,
+            resident_fraction=resident_fraction, floor=floor)
         self.usage = usage or ExpertUsage(cfg.num_experts, cfg.num_tasks,
                                           decay=usage_decay)
         # async paging: with a transfer engine the cache double-buffers —
@@ -822,11 +1009,13 @@ class PagedMoE:
             self.cache = ShardedExpertCache(host, max_resident, self.mesh,
                                             axis=ep_axis, usage=self.usage,
                                             transfer_engine=transfer_engine,
-                                            pinned=pinned)
+                                            pinned=pinned,
+                                            policy=self.policy)
         else:
             self.cache = ExpertCache(host, max_resident, usage=self.usage,
                                      transfer_engine=transfer_engine,
-                                     pinned=pinned)
+                                     pinned=pinned, policy=self.policy)
+        self._forwards = 0   # rebalance cadence counter (policy-driven)
         # per-wave record of the most recent forward (wave id, expert
         # count, lookahead submissions, fence stall) — the paged layer's
         # contribution to the serve-time stall/overlap reports
@@ -897,7 +1086,8 @@ class PagedMoE:
 
         mesh, axis = self.mesh, self.ep_axis
 
-        def wave(groups, routing, slots, pinned, wave_mask, remap, rows_acc):
+        def wave(groups, routing, slots, pinned, wave_mask,
+                 rep_table, rep_counts, rows_acc):
             if sharded:
                 # (m, R, ...) shard banks -> flat (m*R, ...) global slots;
                 # the reshape keeps the expert dim shard-contiguous so the
@@ -909,13 +1099,24 @@ class PagedMoE:
 
             def per_group(xg, r, rows):
                 in_wave = wave_mask[r.expert]          # (T, k) bool
-                # remap carries -1 for non-resident experts; dereference
-                # ONLY where the wave mask holds (a forgotten mask must
-                # never alias slot 0's expert — see ExpertCache.remap)
-                slot_idx = jnp.where(in_wave, remap[r.expert], 0)
+                # load-split replica dispatch: an expert's tokens are
+                # dealt round-robin over its resident replicas (identical
+                # weights on different shards), and each replica sees a
+                # DENSE position stream (position // reps) — bit-exact
+                # per token because a GEMM row depends only on its own
+                # inputs, and the one-replica case reduces to exactly the
+                # historical remap indexing (reps == 1 → identity).
+                reps = jnp.maximum(rep_counts[r.expert], 1)
+                ridx = jnp.remainder(r.position, reps)
+                # the table carries -1 for unfilled replica columns;
+                # dereference ONLY where the wave mask holds (a forgotten
+                # mask must never alias slot 0's expert — see
+                # ExpertCache.remap)
+                slot_idx = jnp.where(in_wave, rep_table[r.expert, ridx], 0)
                 r_w = R.Routing(
                     expert=slot_idx.astype(jnp.int32), gate=r.gate,
-                    position=r.position, valid=r.valid & in_wave,
+                    position=r.position // reps,
+                    valid=r.valid & in_wave,
                     probs=r.probs)
                 if sharded:
                     # one-hot dispatch: under GSPMD the (rs, C, d) buffer
@@ -923,7 +1124,7 @@ class PagedMoE:
                     # into the token all-to-all of expert parallelism
                     buf = R.dispatch_onehot(xg, r_w, rs, capacity)
                     buf = jax.lax.with_sharding_constraint(
-                        buf, NamedSharding(mesh, P(axis, None, None)))
+                        buf, ep_dispatch_sharding(mesh, axis))
                 else:
                     buf = R.dispatch(xg, r_w, rs, capacity)
                 sizes = R.dispatch_counts(r_w, rs)
@@ -946,7 +1147,7 @@ class PagedMoE:
             return jax.vmap(per_group)(routing, rows_acc, real)
 
         self._route_fn = jax.jit(route)
-        self._wave_fn = jax.jit(wave, donate_argnums=(6,))
+        self._wave_fn = jax.jit(wave, donate_argnums=(7,))
         self._finish_fn = jax.jit(finish)
         self._built_for = (g, capacity)
 
@@ -980,6 +1181,11 @@ class PagedMoE:
 
         counts_np = np.asarray(counts.sum(axis=0))
         self.usage.update(counts_np, task_id)
+        if self.mesh is not None:
+            # per-shard load evidence for the elastic policy (and the
+            # imbalance numbers in stats()) — recorded under the CURRENT
+            # plan, i.e. where this forward's tokens actually go
+            self.cache.record_load(counts_np)
         needed = [int(i) for i in np.nonzero(counts_np)[0]]
         # wave order: already-resident experts first, so warm residency
         # (prefetch or the previous batch) turns into demand hits
@@ -998,16 +1204,19 @@ class PagedMoE:
             # mispredicted demand-pages (correctness never depends on
             # prediction quality)
             self.cache.ensure(wave_ids)
-            remap = self.cache.remap()
+            table, rep_counts = self.cache.replica_table()
             # masking contract: every id this wave dereferences must be
-            # resident (remap returns -1 sentinels for everything else)
-            assert (remap[wave_ids] >= 0).all(), \
-                f"wave ids {wave_ids} not all resident: {remap[wave_ids]}"
+            # resident on at least one of its plan shards (the table
+            # carries -1 sentinels for everything else)
+            assert (rep_counts[wave_ids] >= 1).all(), \
+                f"wave ids {wave_ids} not all resident: " \
+                f"{rep_counts[wave_ids]}"
             mask = np.zeros((cfg.num_experts,), bool)
             mask[wave_ids] = True
             rows = self._wave_fn(groups, routing, self.cache.slots,
                                  self.cache.pinned, jnp.asarray(mask),
-                                 jnp.asarray(remap), rows)
+                                 jnp.asarray(table),
+                                 jnp.asarray(rep_counts), rows)
             prefetched: list[int] = []
             if eng is not None:
                 if k + 1 < len(waves):
@@ -1026,6 +1235,11 @@ class PagedMoE:
                 else 0.0,
             })
         self.last_timeline = timeline
+        # rebalance point: ALL of this forward's waves have launched, the
+        # next forward has not started — the only place a plan may swap.
+        # Migration page-ins submitted here stream behind the combine and
+        # the trunk layers that follow (tagged "migrate" in the ledger).
+        self._maybe_rebalance()
         y, aux = self._finish_fn(routing, rows, real)
         y = y.reshape(-1, d)[:t_total].reshape(orig_shape).astype(x.dtype)
 
@@ -1041,27 +1255,59 @@ class PagedMoE:
         """Chunk the needed experts into residency-bounded waves.
 
         Single device: consecutive chunks of ``max_resident``.  Expert-
-        parallel: every shard contributes up to its bank size per wave, so
-        wave ``w`` holds the w-th chunk of EACH shard's needed-list — all
-        shards compute concurrently and the wave count is the max per-shard
-        chunk count, not the global one (the linear-scaling win)."""
+        parallel: first-fit against every shard's bank — an expert joins
+        the earliest wave in which ALL of its plan shards still have a
+        free slot (a replicated expert claims one slot per shard).  All
+        shards compute concurrently, so the wave count is the max
+        per-shard slot pressure, not the global count (the linear-scaling
+        win); for single-replica plans this is exactly the per-shard
+        chunking the static path always did."""
         rs = self.cache.max_resident
         if self.mesh is None:
             return [needed[i:i + rs] for i in range(0, len(needed), rs)]
-        by: dict[int, list[int]] = {}
-        for e in needed:   # per-shard lists keep the resident-first order
-            by.setdefault(self.cache.owner(e), []).append(e)
-        n_waves = max((-(-len(v) // rs) for v in by.values()), default=0)
-        return [sum((v[w * rs:(w + 1) * rs] for v in by.values()), [])
-                for w in range(n_waves)]
+        plan = self.cache.plan
+        waves: list[list[int]] = []
+        loads: list[np.ndarray] = []
+        for e in needed:   # first-fit keeps the resident-first order
+            shards = plan.shards_of(e)
+            w = 0
+            while True:
+                if w == len(waves):
+                    waves.append([])
+                    loads.append(np.zeros(self.cache.num_shards, np.int64))
+                if all(loads[w][s] < rs for s in shards):
+                    waves[w].append(e)
+                    for s in shards:
+                        loads[w][s] += 1
+                    break
+                w += 1
+        return waves
+
+    def _maybe_rebalance(self) -> None:
+        """Consult the placement policy between forwards (its cadence):
+        an accepted proposal swaps the plan atomically via ``set_plan``."""
+        if self.mesh is None:
+            return
+        every = getattr(self.policy, "rebalance_every", 0)
+        self._forwards += 1
+        if not every or self._forwards % every:
+            return
+        new = self.policy.update(self.cache.plan, self.usage,
+                                 self.cache.shard_load,
+                                 slots_per_shard=self.cache.max_resident)
+        if new is not None:
+            self.cache.set_plan(new)
 
     def predict(self, task_id: Optional[int] = None) -> list[int]:
         """Router-lookahead prediction: the next batch's expert working
         set, hottest first, from the per-task usage EMA (task-level
-        sparsity makes this stable — the paper's §IV-F premise)."""
+        sparsity makes this stable — the paper's §IV-F premise).  The
+        ranking itself is the placement policy's call — the scheduler's
+        cross-quantum lookahead and the per-batch prefetch both consume
+        the plan through this one interface."""
         budget = (self.cache.total_slots if self.mesh is not None
                   else self.cache.max_resident)
-        return self.usage.hot(budget, task_id)
+        return self.policy.prefetch_ranking(self.usage, budget, task_id)
 
     def prefetch(self, task_id: Optional[int] = None) -> None:
         """Warm the device slots with the usage-EMA-hot experts for a task —

@@ -1,0 +1,12 @@
+from repro.serve.placement.elastic import ElasticPolicy
+from repro.serve.placement.plan import PlacementPlan
+from repro.serve.placement.policy import (BudgetPolicy, LRUPolicy,
+                                          PlacementPolicy, StaticPolicy,
+                                          budget_slots, fraction_slots,
+                                          get_policy)
+
+__all__ = [
+    "PlacementPlan", "PlacementPolicy",
+    "StaticPolicy", "LRUPolicy", "BudgetPolicy", "ElasticPolicy",
+    "get_policy", "budget_slots", "fraction_slots",
+]

@@ -979,5 +979,14 @@ class Scheduler:
             out["slot_utilization"] = slot_steps / (steps * cap)
         cache_stats = getattr(self.backend, "cache_stats", None)
         if callable(cache_stats):
-            out["expert_cache"] = cache_stats()
+            cs = cache_stats()
+            out["expert_cache"] = cs
+            # expert-parallel backends report placement evidence (plan
+            # generation, migration/replication events, per-shard load) —
+            # surface it top-level so serving reports and benchmark
+            # artifacts need not dig through the cache blob
+            if "placement" in cs:
+                out["placement"] = cs["placement"]
+                out["shard_load"] = cs.get("shard_load")
+                out["shard_load_imbalance"] = cs.get("shard_load_imbalance")
         return out

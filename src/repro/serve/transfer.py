@@ -87,6 +87,35 @@ class TransferStats:
     bytes_cancelled: int = 0
     stall_s: float = 0.0
     hidden_s: float = 0.0
+    # per-tag sub-ledgers ("demand" / "prefetch" / "migrate" / ...): the
+    # placement benchmark reads tags["migrate"]["overlap_ratio"] to prove
+    # rebalancing page-ins rode behind compute instead of stalling it
+    tags: dict = field(default_factory=dict)
+
+    def _tag(self, tag: str) -> dict:
+        return self.tags.setdefault(tag, {
+            "submitted": 0, "fenced": 0, "cancelled": 0,
+            "stall_s": 0.0, "hidden_s": 0.0})
+
+    def note_submit(self, tag: str) -> None:
+        self._tag(tag)["submitted"] += 1
+
+    def note_cancel(self, tag: str) -> None:
+        self._tag(tag)["cancelled"] += 1
+
+    def note_fence(self, tag: str, stall_s: float, hidden_s: float) -> None:
+        d = self._tag(tag)
+        d["fenced"] += 1
+        d["stall_s"] += stall_s
+        d["hidden_s"] += hidden_s
+
+    def tags_dict(self) -> dict[str, Any]:
+        out = {}
+        for tag, d in self.tags.items():
+            tot = d["stall_s"] + d["hidden_s"]
+            out[tag] = dict(d, overlap_ratio=(
+                d["hidden_s"] / tot if tot > 0 else 1.0))
+        return out
 
     @property
     def active_s(self) -> float:
@@ -110,6 +139,7 @@ class TransferStats:
             "bytes_cancelled": self.bytes_cancelled,
             "stall_s": self.stall_s, "hidden_s": self.hidden_s,
             "overlap_ratio": self.overlap_ratio,
+            "tags": self.tags_dict(),
         }
 
     def reset(self) -> None:
@@ -118,18 +148,21 @@ class TransferStats:
                   "bytes_cancelled"):
             setattr(self, f, 0)
         self.stall_s = self.hidden_s = 0.0
+        self.tags.clear()
 
 
 class Transfer:
     """Handle for one in-flight host→device copy (one expert's leaves)."""
 
     __slots__ = ("key", "nbytes", "t_submit", "done", "cancelled",
-                 "_payload", "_future", "ready_at")
+                 "_payload", "_future", "ready_at", "tag")
 
-    def __init__(self, key: Any, nbytes: int, t_submit: float):
+    def __init__(self, key: Any, nbytes: int, t_submit: float,
+                 tag: str = "page"):
         self.key = key
         self.nbytes = int(nbytes)
         self.t_submit = float(t_submit)
+        self.tag = str(tag)
         self.done = False           # fenced (payload handed out)
         self.cancelled = False
         self._payload: Optional[dict] = None
@@ -180,10 +213,11 @@ class TransferEngine:
 
     # ------------------------------------------------------------ stream
 
-    def submit(self, key: Any, arrays: dict) -> Transfer:
+    def submit(self, key: Any, arrays: dict, tag: str = "page") -> Transfer:
         """Begin a non-blocking host→device copy of ``arrays`` (a dict of
-        host ndarrays).  Returns immediately."""
-        t = Transfer(key, _nbytes(arrays), self.now())
+        host ndarrays).  Returns immediately.  ``tag`` labels the copy's
+        purpose ("demand"/"prefetch"/"migrate") for the per-tag ledger."""
+        t = Transfer(key, _nbytes(arrays), self.now(), tag=tag)
         # snapshot the host views: the worker must not race a caller that
         # mutates the host store after submit
         host = {n: np.asarray(a) for n, a in arrays.items()}
@@ -192,6 +226,7 @@ class TransferEngine:
         with self._lock:
             self.stats.submitted += 1
             self.stats.bytes_submitted += t.nbytes
+            self.stats.note_submit(t.tag)
         return t
 
     def ready(self, t: Transfer) -> bool:
@@ -237,6 +272,7 @@ class TransferEngine:
             # pre-fence flight time: hidden behind whatever the caller
             # was doing between submit and fence
             self.stats.hidden_s += max(0.0, t0 - t.t_submit)
+            self.stats.note_fence(t.tag, t1 - t0, max(0.0, t0 - t.t_submit))
         t.done = True
         t._payload = payload
         return payload
@@ -252,6 +288,7 @@ class TransferEngine:
         with self._lock:
             self.stats.cancelled += 1
             self.stats.bytes_cancelled += t.nbytes
+            self.stats.note_cancel(t.tag)
 
     def on_wave(self, seconds: Optional[float] = None) -> None:
         """Compute-progress hook: a wave was launched.  Wall time advances
@@ -325,8 +362,8 @@ class FakeTransferEngine:
     def _latency(self, key: Any) -> Optional[float]:
         return self.schedule.get(key, self.latency_s)
 
-    def submit(self, key: Any, arrays: dict) -> Transfer:
-        t = Transfer(key, _nbytes(arrays), self.t)
+    def submit(self, key: Any, arrays: dict, tag: str = "page") -> Transfer:
+        t = Transfer(key, _nbytes(arrays), self.t, tag=tag)
         lat = self._latency(key)
         t.ready_at = math.inf if lat is None else self.t + float(lat)
         # hold HOST copies: a late mutation of the cache's host store must
@@ -335,6 +372,7 @@ class FakeTransferEngine:
         self._inflight[key] = t
         self.stats.submitted += 1
         self.stats.bytes_submitted += t.nbytes
+        self.stats.note_submit(t.tag)
         return t
 
     def ready(self, t: Transfer) -> bool:
@@ -358,11 +396,14 @@ class FakeTransferEngine:
             # the flight time BEFORE the fence started overlapped whatever
             # the caller was doing (however the test advanced the clock)
             self.stats.hidden_s += max(0.0, self.t - t.t_submit)
+            self.stats.note_fence(t.tag, wait, max(0.0, self.t - t.t_submit))
             self.t = t.ready_at
         else:
             self.stats.fences_ready += 1
             # copy finished before the fence: its whole duration was hidden
             self.stats.hidden_s += max(0.0, t.ready_at - t.t_submit)
+            self.stats.note_fence(t.tag, 0.0,
+                                  max(0.0, t.ready_at - t.t_submit))
         self.stats.fenced += 1
         t.done = True
         self._inflight.pop(t.key, None)
@@ -378,6 +419,7 @@ class FakeTransferEngine:
         self._inflight.pop(t.key, None)
         self.stats.cancelled += 1
         self.stats.bytes_cancelled += t.nbytes
+        self.stats.note_cancel(t.tag)
 
     def reset_stats(self) -> None:
         self.stats.reset()

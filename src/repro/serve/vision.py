@@ -72,7 +72,8 @@ class M3ViTServer:
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
                  ep_mesh=None, async_paging: bool = False,
-                 transfer_engine=None, factor=None):
+                 transfer_engine=None, factor=None,
+                 placement=None):
         if cfg.family != "vit-moe":
             raise ValueError("M3ViTServer serves the vit-moe family")
         self.cfg = cfg
@@ -117,11 +118,17 @@ class M3ViTServer:
         # expert_budget_bytes (per MoE layer) beats resident_fraction when
         # given: quantized expert weights then fit ~4× more resident
         # experts into the same device budget (the hit-rate win)
+        # ``placement`` (policy name or PlacementPolicy) decides shard
+        # ownership, victim pick, and prefetch ranking for every paged
+        # layer; a string constructs one policy instance PER layer, so
+        # each layer's plan evolves against its own router's usage
+        self.placement = placement
         self.paged = {
             i: PagedMoE(self.layer_params[i]["moe"], self.mcfg,
                         resident_fraction=resident_fraction,
                         budget_bytes=expert_budget_bytes,
-                        mesh=mesh, transfer_engine=self.engine)
+                        mesh=mesh, transfer_engine=self.engine,
+                        placement=placement)
             for i, kind in enumerate(self.kinds) if kind == "attn_moe"
         }
 
@@ -204,6 +211,8 @@ class M3ViTServer:
         async_agg = {"async_prefetches": 0, "inflight_joins": 0,
                      "async_cancelled": 0}
         frac = 0.0
+        shard_load = None
+        placement: dict[str, Any] = {}
         for paged in self.paged.values():
             s = paged.cache.stats()
             for k in ("hits", "misses", "evictions", "bytes_paged"):
@@ -211,9 +220,33 @@ class M3ViTServer:
             for k in async_agg:
                 async_agg[k] += s.get(k, 0)
             frac = s["resident_fraction"]
+            if "shard_load" in s:       # expert-parallel layers only
+                sl = np.asarray(s["shard_load"], np.float64)
+                shard_load = sl if shard_load is None else shard_load + sl
+                p = s["placement"]
+                placement = {
+                    "policy": p["policy"],
+                    "generation": max(placement.get("generation", 0),
+                                      p["generation"]),
+                    "plan_swaps": placement.get("plan_swaps", 0)
+                    + p["plan_swaps"],
+                    "migrations": placement.get("migrations", 0)
+                    + p["migrations"],
+                    "replications": placement.get("replications", 0)
+                    + p["replications"],
+                    "max_replicas": max(placement.get("max_replicas", 1),
+                                        p["max_replicas"]),
+                }
         tot = agg["hits"] + agg["misses"]
         agg["hit_rate"] = agg["hits"] / tot if tot else 1.0
         agg["resident_fraction"] = frac
+        if shard_load is not None:
+            agg["shard_load"] = [float(v) for v in shard_load]
+            s_tot = float(shard_load.sum())
+            agg["shard_load_imbalance"] = (
+                float(shard_load.max() * shard_load.size / s_tot)
+                if s_tot > 0 else 0.0)
+            agg["placement"] = placement
         if self.engine is not None:
             # one engine is shared by every layer, so stall/overlap are
             # read from its single ledger, not summed per layer
@@ -221,6 +254,7 @@ class M3ViTServer:
             agg["stall_s"] = self.engine.stats.stall_s
             agg["hidden_s"] = self.engine.stats.hidden_s
             agg["overlap_ratio"] = self.engine.stats.overlap_ratio
+            agg["transfer_tags"] = self.engine.stats.tags_dict()
         return agg
 
     def reset_stats(self) -> None:
@@ -301,14 +335,15 @@ class VisionBackend:
                  expert_budget_bytes: Optional[int] = None,
                  rules: Optional[ShardingRules] = None,
                  ep_mesh=None, async_paging: bool = False,
-                 transfer_engine=None, factor=None):
+                 transfer_engine=None, factor=None,
+                 placement=None):
         self.server = M3ViTServer(cfg, params,
                                   resident_fraction=resident_fraction,
                                   expert_budget_bytes=expert_budget_bytes,
                                   rules=rules, ep_mesh=ep_mesh,
                                   async_paging=async_paging,
                                   transfer_engine=transfer_engine,
-                                  factor=factor)
+                                  factor=factor, placement=placement)
         self.num_tasks = len(MV.TASKS)
         self.usage = None   # per-layer usage lives inside each PagedMoE
 

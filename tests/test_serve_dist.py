@@ -266,8 +266,10 @@ ASYNC_SHARDED_PARITY = HEADER + textwrap.dedent("""
     x = (jax.random.normal(jax.random.PRNGKey(1), (2, 50, 32))
          * 0.5).astype(jnp.float32)
     # staggered per-shard latencies: shard1's copies land LATE relative
-    # to shard0's, so fences interleave adversarially across books
-    sched = {(f"shard{s}", e): 0.25 + 2.0 * s + 0.5 * e
+    # to shard0's, so fences interleave adversarially across books.
+    # Transfer keys carry GLOBAL expert ids (shard s owns [4s, 4s+4)
+    # under the static plan)
+    sched = {(f"shard{s}", 4 * s + e): 0.25 + 2.0 * s + 0.5 * e
              for s in (0, 1) for e in range(4)}
     for task in (0, 1):
         ref, _ = PagedMoE(params, cfg, resident_fraction=0.5,
@@ -312,10 +314,10 @@ SHARD_HANG = HEADER + textwrap.dedent("""
     rng = _np.random.default_rng(0)
     host = {"w": rng.standard_normal((8, 4, 4)).astype(_np.float32)}
     eng = FakeTransferEngine(latency_s=0.1, timeout_s=5.0,
-                             schedule={("shard1", 0): None})   # hung link
+                             schedule={("shard1", 4): None})   # hung link
     cache = ShardedExpertCache(host, 2, mesh, transfer_engine=eng)
     try:
-        cache.ensure([0, 4])     # shard0 local 0 (fine), shard1 local 0 (hung)
+        cache.ensure([0, 4])     # shard0's expert 0 (fine), shard1's 4 (hung)
     except TransferTimeout as e:
         assert "shard1" in str(e) and "hung" in str(e), str(e)
     else:
